@@ -1,0 +1,47 @@
+"""Shared benchmark scaffolding.
+
+Gradient dynamics run on REDUCED models (CPU container); all reported times
+come from the analytic time model priced on the FULL ResNet-56/110 (or full
+transformer) cost tables — the paper's own experiments simulate resource
+profiles the same way (DESIGN.md §2/§8).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro import optim
+from repro.configs.resnet_cifar import RESNET56, RESNET110, get_resnet
+from repro.data.partition import dirichlet_partition, iid_partition
+from repro.data.pipeline import ClientDataset, make_eval_batch
+from repro.data.synthetic import ClassImageTask
+from repro.fed import HeteroEnv, ResNetAdapter, SimClient, TRAINERS
+
+
+def image_setup(n_clients=10, samples=2000, batch=32, iid=True, n_classes=10, seed=0):
+    cfg = RESNET56.reduced()
+    task = ClassImageTask(n_classes=n_classes, image_size=cfg.image_size)
+    labels = np.random.default_rng(seed).integers(0, n_classes, samples)
+    part = iid_partition(labels, n_clients, seed) if iid else dirichlet_partition(
+        labels, n_clients, 0.5, seed)
+    clients = [SimClient(i, ClientDataset(task, labels, part[i], batch), None)
+               for i in range(n_clients)]
+    return cfg, clients, make_eval_batch(task, 512)
+
+
+def run_method(method, cfg, clients, ev, *, cost_model="resnet-110", rounds=8,
+               target=None, scheduler="dynamic", participation=1.0, seed=0,
+               switch_every=50, dcor_alpha=0.0, lr=1e-3):
+    cost_cfg = get_resnet(cost_model)
+    adapter = ResNetAdapter(cfg, cost_cfg=cost_cfg, dcor_alpha=dcor_alpha)
+    env = HeteroEnv(len(clients), switch_every=switch_every, seed=seed)
+    kw = {"scheduler": scheduler} if method == "dtfl" else {}
+    tr = TRAINERS[method](adapter, clients, env, optim.adam(lr), seed=seed, **kw)
+    logs = tr.run(rounds, ev, target_acc=target, participation=participation)
+    return logs
+
+
+def emit(rows: list[tuple]):
+    for r in rows:
+        print(",".join(str(x) for x in r))

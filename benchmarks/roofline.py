@@ -1,0 +1,57 @@
+"""Roofline table assembly from the dry-run artifacts (experiments/dryrun/).
+
+Prints the per-(arch x shape) three-term roofline, the dominant bottleneck,
+MODEL_FLOPS / HLO_FLOPs usefulness ratio, and a one-line lever suggestion.
+Populated by ``python -m repro.launch.dryrun --all``.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+LEVERS = {
+    "compute": "raise arithmetic intensity: fuse aux+task heads, larger per-device batch",
+    "memory": "cut HBM traffic: bf16 weight streaming, larger FSDP shard group, no kv repeat",
+    "collective": "cut bytes on ICI: reduce FSDP all-gather (8-way group), overlap with compute",
+}
+
+
+def load_records(path="experiments/dryrun"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(path, "*.json"))):
+        with open(f) as fh:
+            r = json.load(fh)
+        stem = os.path.basename(f)[:-5]
+        for tag in ("seqpar", "serve_seq", "serve_dp", "megatron_sp"):
+            if f"_{tag}" in stem:
+                r["preset"] = tag
+        if "_pv" in stem:
+            r["preset"] = r.get("preset", "") + "+padvocab"
+        r.setdefault("preset", "baseline")
+        recs.append(r)
+    return recs
+
+
+def main(emit_fn=print, path="experiments/dryrun"):
+    recs = load_records(path)
+    if not recs:
+        emit_fn("roofline,NO_DATA,run `python -m repro.launch.dryrun --all` first")
+        return []
+    out = []
+    for r in recs:
+        t = r["roofline"]
+        out.append((
+            "roofline", r["arch"], r["shape"], r["mesh"], r["preset"],
+            f'{t["compute_s"]*1e3:.2f}ms', f'{t["memory_s"]*1e3:.2f}ms',
+            f'{t["collective_s"]*1e3:.2f}ms', t["dominant"],
+            f'{r["useful_flops_ratio"]:.2f}',
+            f'{r["memory"]["temp_bytes"]/2**30:.1f}GiB',
+        ))
+    for r in out:
+        emit_fn(",".join(str(x) for x in r))
+    return out
+
+
+if __name__ == "__main__":
+    main()

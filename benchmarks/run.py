@@ -1,0 +1,38 @@
+# One module per paper table/figure. Each main() prints CSV rows
+# ``table,<keys...>,<values...>``; this driver runs them all.
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (fig3_tier_count, roofline, table1_tier_times,
+                            table2_normalized, table3_baselines,
+                            table4_scaling, table5_privacy)
+
+    suites = [
+        ("table1_tier_times", table1_tier_times.main),
+        ("table2_normalized", table2_normalized.main),
+        ("table3_baselines", table3_baselines.main),
+        ("table4_scaling", table4_scaling.main),
+        ("fig3_tier_count", fig3_tier_count.main),
+        ("table5_privacy", table5_privacy.main),
+        ("roofline", roofline.main),
+    ]
+    failures = 0
+    for name, fn in suites:
+        t0 = time.time()
+        print(f"### {name}")
+        try:
+            fn()
+            print(f"### {name} done in {time.time()-t0:.1f}s")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"### {name} FAILED: {e!r}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

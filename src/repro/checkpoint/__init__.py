@@ -1,0 +1,81 @@
+"""Pytree checkpointing via .npz (no orbax in the container).
+
+Flattens arbitrary dict/list/tuple pytrees with '/'-joined key paths;
+restores exact structure from a treedef-free path encoding. Scalars and
+numpy/jax arrays round-trip; dtypes preserved.
+"""
+from __future__ import annotations
+
+import io
+import os
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any, prefix: str = "") -> dict[str, np.ndarray]:
+    out: dict[str, np.ndarray] = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}d:{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        tag = "l" if isinstance(tree, list) else "t"
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{tag}:{i}/"))
+    else:
+        out[prefix.rstrip("/")] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: dict[str, np.ndarray]) -> Any:
+    if list(flat) == [""]:
+        return flat[""]
+
+    def insert(node: dict, parts: list[str], value):
+        head, rest = parts[0], parts[1:]
+        if rest:
+            node = node.setdefault(head, {})
+            insert(node, rest, value)
+        else:
+            node[head] = value
+
+    root: dict = {}
+    for k, v in flat.items():
+        insert(root, k.split("/"), v)
+
+    def build(node):
+        if not isinstance(node, dict):
+            return node
+        kinds = {k.split(":", 1)[0] for k in node}
+        assert len(kinds) == 1, f"mixed node kinds: {sorted(node)}"
+        kind = kinds.pop()
+        if kind == "d":
+            return {k.split(":", 1)[1]: build(v) for k, v in node.items()}
+        items = sorted(node.items(), key=lambda kv: int(kv[0].split(":", 1)[1]))
+        seq = [build(v) for _, v in items]
+        return seq if kind == "l" else tuple(seq)
+
+    return build(root)
+
+
+def save(path: str, tree: Any) -> None:
+    flat = _flatten(jax.tree.map(np.asarray, tree))
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    # atomic write
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **flat)
+        os.replace(tmp, path)
+    except BaseException:
+        os.unlink(tmp)
+        raise
+
+
+def load(path: str) -> Any:
+    with np.load(path, allow_pickle=False) as z:
+        flat = {k: z[k] for k in z.files}
+    return _unflatten(flat)

@@ -1,0 +1,2 @@
+"""DTFL core: tiering, local-loss split training, dynamic tier scheduling."""
+from repro.core import aggregation, local_loss, scheduler, tiering, timemodel  # noqa: F401

@@ -1,0 +1,37 @@
+"""FedAvg aggregation across tiers (Algorithm 1 lines 11-13, Appendix A.7 (5)).
+
+Each client's (client-side, server-side) halves are merged back into a full
+parameter tree (lossless — tiering.merge_params), then averaged with weights
+``N_k / N`` (Eq. 1; Algorithm 1 line 13 uses 1/K — we expose both).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Params = dict
+
+
+def weighted_average(trees: list[Params], weights: list[float]) -> Params:
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / w.sum()
+
+    def avg(*leaves):
+        stacked = jnp.stack([l.astype(jnp.float32) for l in leaves])
+        out = jnp.tensordot(w, stacked, axes=1)
+        return out.astype(leaves[0].dtype)
+
+    return jax.tree.map(avg, *trees)
+
+
+def uniform_average(trees: list[Params]) -> Params:
+    return weighted_average(trees, [1.0] * len(trees))
+
+
+def aggregate_dtfl_round(cfg, tier_states: list[tuple[int, Params, Params]],
+                         weights: list[float]) -> Params:
+    """tier_states: [(tier, client_params, server_params)] per client."""
+    from repro.core import tiering
+
+    fulls = [tiering.merge_params(c, s) for _, c, s in tier_states]
+    return weighted_average(fulls, weights)

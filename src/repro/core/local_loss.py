@@ -1,0 +1,132 @@
+"""Local-loss-based split training (the paper's §3.2 / Algorithm 1 steps 2-4).
+
+Client and server updates are *decoupled*: the client trains
+(client-side blocks + auxiliary head) against a local loss; the server trains
+the server-side blocks + task head on ``stop_gradient(z)``. No gradient ever
+crosses the split, so both halves advance in parallel — the property the
+dynamic tier scheduler's time model (Eq. 5: max of the two paths) relies on.
+
+``make_dtfl_train_step`` builds the per-tier jitted step. Tier (= split
+point) is static, so a DTFL deployment holds <= M compiled executables.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.optim import OptState, Optimizer
+
+Params = dict
+MOE_AUX_WEIGHT = 0.01
+
+
+def token_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token cross-entropy; logits any float dtype, stats in fp32."""
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    picked = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels[..., None], axis=-1
+    )[..., 0]
+    return jnp.mean(lse - picked)
+
+
+class DTFLState(NamedTuple):
+    client_params: Params
+    aux_params: Params
+    server_params: Params
+    client_opt: OptState
+    aux_opt: OptState
+    server_opt: OptState
+
+
+class DTFLMetrics(NamedTuple):
+    client_loss: jax.Array
+    server_loss: jax.Array
+
+
+def init_tier_state(key, cfg, params: Params, tier: int, optimizer: Optimizer) -> DTFLState:
+    from repro.core import tiering
+
+    client_p, server_p = tiering.split_params(params, cfg, tier)
+    aux_p = M.aux_head_init(key, cfg)
+    return DTFLState(
+        client_params=client_p,
+        aux_params=aux_p,
+        server_params=server_p,
+        client_opt=optimizer.init(client_p),
+        aux_opt=optimizer.init(aux_p),
+        server_opt=optimizer.init(server_p),
+    )
+
+
+def make_dtfl_train_step(
+    cfg,
+    optimizer: Optimizer,
+    *,
+    dcor_alpha: float = 0.0,
+    dcor_fn: Callable | None = None,
+) -> Callable:
+    """Returns step(state, batch) -> (state, DTFLMetrics).
+
+    ``dcor_alpha`` > 0 enables the §4.4 privacy regularizer
+    ``(1-a)·loss + a·DCor(x, z)`` on the client objective.
+    """
+
+    def step(state: DTFLState, batch: dict) -> tuple[DTFLState, DTFLMetrics]:
+        labels = batch["labels"]
+
+        # ---- client: local loss through the auxiliary head ----
+        def client_loss(cp, ap):
+            z, moe_aux = M.client_forward(cp, cfg, batch)
+            logits = M.aux_head_apply(ap, cfg, z)
+            loss = token_xent(logits, labels) + MOE_AUX_WEIGHT * moe_aux
+            if dcor_alpha > 0.0:
+                x_in = M.embed_tokens(cp, cfg, batch)
+                zz = z[0] if isinstance(z, tuple) else z
+                loss = (1.0 - dcor_alpha) * loss + dcor_alpha * dcor_fn(x_in, zz)
+            return loss, z
+
+        (closs, z), (cgrads, agrads) = jax.value_and_grad(
+            client_loss, argnums=(0, 1), has_aux=True
+        )(state.client_params, state.aux_params)
+
+        # ---- server: task loss on detached activations (parallel path) ----
+        z = jax.lax.stop_gradient(z)
+
+        def server_loss(sp):
+            logits, moe_aux = M.server_forward(sp, cfg, z)
+            return token_xent(logits, labels) + MOE_AUX_WEIGHT * moe_aux
+
+        sloss, sgrads = jax.value_and_grad(server_loss)(state.server_params)
+
+        cp, copt = optimizer.update(state.client_params, cgrads, state.client_opt)
+        ap, aopt = optimizer.update(state.aux_params, agrads, state.aux_opt)
+        sp, sopt = optimizer.update(state.server_params, sgrads, state.server_opt)
+        return (
+            DTFLState(cp, ap, sp, copt, aopt, sopt),
+            DTFLMetrics(client_loss=closs, server_loss=sloss),
+        )
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# monolithic step (FedAvg-style baselines / dry-run reference)
+# ---------------------------------------------------------------------------
+
+def make_full_train_step(cfg, optimizer: Optimizer) -> Callable:
+    """Conventional single-loss step over the unsplit model."""
+
+    def step(params: Params, opt_state: OptState, batch: dict):
+        def loss_fn(p):
+            logits, moe_aux = M.forward(p, cfg, batch)
+            return token_xent(logits, batch["labels"]) + MOE_AUX_WEIGHT * moe_aux
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state = optimizer.update(params, grads, opt_state)
+        return params, opt_state, loss
+
+    return step

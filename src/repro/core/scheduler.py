@@ -1,0 +1,154 @@
+"""Dynamic tier scheduler — Algorithm 1 of the paper.
+
+Host-side (numpy) component. The scheduler sees ONLY what the paper's server
+sees per round:
+  * the measured total client-side time of each client in its assigned tier,
+  * the client's communicated link speed ``nu`` (bytes/s),
+  * the client's batch count ``n_batches``.
+
+Tier profiling (done once, lines "Tier Profiling"): reference per-tier
+client/server times ``t_client_ref[m]``, ``t_server_ref[m]`` on a standard
+batch, and transfer sizes ``d_size(m)``. The Table-2 invariance — normalized
+time ratios between tiers are client-independent — lets the scheduler
+extrapolate a client's time in *unobserved* tiers from the one observed tier
+(Algorithm 1 lines 24-29).
+
+Scheduling (lines 31-33):
+  T_max  = max_k min_m  T_hat_k(m)
+  m_k    = argmax_m { m : T_hat_k(m) <= T_max }   (least offloading)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class TierProfile:
+    """Server-side profiling table (per standard batch)."""
+
+    t_client_ref: np.ndarray   # (M,) reference client compute time per batch
+    t_server_ref: np.ndarray   # (M,) server compute time per batch
+    d_size: np.ndarray         # (M,) transferred bytes per batch
+
+    @property
+    def n_tiers(self) -> int:
+        return len(self.t_client_ref)
+
+    @classmethod
+    def from_cost_table(cls, costs, n_batches: int, *, ref_flops: float, server_flops: float):
+        """Build the profile from an analytic TierCostTable (timemodel.py)."""
+        return cls(
+            t_client_ref=costs.client_flops / ref_flops,
+            t_server_ref=costs.server_flops / server_flops,
+            d_size=np.array(
+                [costs.d_size(m, n_batches) for m in range(costs.n_tiers)]
+            ),
+        )
+
+
+class EMA:
+    def __init__(self, alpha: float = 0.5):
+        self.alpha = alpha
+        self.value: float | None = None
+
+    def update(self, x: float) -> float:
+        self.value = x if self.value is None else self.alpha * x + (1 - self.alpha) * self.value
+        return self.value
+
+
+@dataclass
+class _ClientState:
+    tier: int                      # currently assigned tier (0-based)
+    nu: float = 1e6                # last communicated link bytes/s
+    n_batches: int = 1
+    ema: dict = field(default_factory=dict)   # tier -> EMA of client compute time
+    last_obs_tier: int | None = None
+
+
+class DynamicTierScheduler:
+    """Stateful per-round scheduler. Tiers are 0-based here (paper: 1-based)."""
+
+    def __init__(self, profile: TierProfile, n_clients: int, *, ema_alpha: float = 0.5,
+                 init_tier: int | None = None, allowed: list[int] | None = None):
+        self.profile = profile
+        self.M = profile.n_tiers
+        # Table 11: an M-tier deployment exposes the LAST M split options
+        # (the full-client option always exists; more tiers add offloading)
+        self.allowed = sorted(allowed) if allowed is not None else list(range(self.M))
+        init_tier = self.allowed[-1] if init_tier is None else init_tier
+        self.clients = [_ClientState(tier=init_tier) for _ in range(n_clients)]
+
+    # ------------------------------------------------------------------
+    # Algorithm 1, lines 21-23: measure & update histories
+    # ------------------------------------------------------------------
+    def observe(self, k: int, *, tier: int, total_client_time: float, nu: float,
+                n_batches: int) -> None:
+        """Record a round observation for client k.
+
+        ``total_client_time`` includes communication (as measured by a real
+        server); the compute part is recovered as T - D^m * N / nu (line 22).
+        """
+        st = self.clients[k]
+        st.nu = nu
+        st.n_batches = n_batches
+        comm = self.profile.d_size[tier] * n_batches / nu
+        compute = max(total_client_time - comm, 1e-9)
+        st.ema.setdefault(tier, EMA()).update(compute)
+        st.last_obs_tier = tier
+        st.tier = tier
+
+    # ------------------------------------------------------------------
+    # Algorithm 1, lines 24-29: per-tier estimates for one client
+    # ------------------------------------------------------------------
+    def estimate(self, k: int) -> np.ndarray:
+        """T_hat_k(m) for all m (Eq. 5 composition)."""
+        st = self.clients[k]
+        M = self.M
+        t_com = self.profile.d_size * st.n_batches / st.nu                    # (M,)
+        t_srv = self.profile.t_server_ref * st.n_batches                      # (M,)
+        if st.last_obs_tier is None:
+            # no observation yet: fall back to the reference profile
+            t_cli = self.profile.t_client_ref * st.n_batches
+        else:
+            m0 = st.last_obs_tier
+            base = st.ema[m0].value                                           # EMA'd round time
+            ratios = self.profile.t_client_ref / self.profile.t_client_ref[m0]
+            t_cli = ratios * base
+        return np.maximum(t_cli + t_com, t_srv + t_com)
+
+    # ------------------------------------------------------------------
+    # Algorithm 1, lines 31-33: assignment
+    # ------------------------------------------------------------------
+    def schedule(self, participants: list[int] | None = None) -> dict[int, int]:
+        ks = list(range(len(self.clients))) if participants is None else participants
+        sel = np.array(self.allowed)
+        est = {k: self.estimate(k) for k in ks}
+        t_max = max(est[k][sel].min() for k in ks)                            # line 31
+        assign = {}
+        for k in ks:                                                          # line 33
+            ok = sel[est[k][sel] <= t_max + 1e-12]
+            m = int(ok.max()) if len(ok) else int(sel[est[k][sel].argmin()])
+            assign[k] = m
+            self.clients[k].tier = m
+        return assign
+
+    def round_time(self, assign: dict[int, int]) -> float:
+        """Estimated straggler time under an assignment."""
+        return max(self.estimate(k)[m] for k, m in assign.items())
+
+
+class StaticScheduler:
+    """Ablation: fixed tier for everyone (the paper's Table 1 columns)."""
+
+    def __init__(self, tier: int, n_clients: int):
+        self.tier = tier
+        self.n = n_clients
+
+    def observe(self, *a, **kw):
+        pass
+
+    def schedule(self, participants=None) -> dict[int, int]:
+        ks = range(self.n) if participants is None else participants
+        return {k: self.tier for k in ks}

@@ -1,0 +1,251 @@
+"""Simulated heterogeneous environment: resource profiles + analytic per-tier
+costs (the paper's Sec. 4.1 simulation, made analytic).
+
+The paper assigns each client a (CPU fraction, Mbps) profile and *simulates*
+slowdown; we compute the same times analytically from per-tier FLOP/byte
+counts. The scheduler never sees these profiles — it only observes the times
+and the communicated ``nu`` (link speed), exactly as in Algorithm 1.
+
+Profiles (paper Sec. 4.1): 4 CPUs/100 Mbps, 2/30, 1/30, 0.2/30, 0.1/10.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+# FLOP/s of "1 CPU" in the simulation; arbitrary unit that sets the
+# compute/communication balance to roughly the paper's regime.
+UNIT_FLOPS = 125e9
+SERVER_FLOPS = 400e9  # the server trains every client's server-side model
+BYTES_PER_PARAM = 4
+
+
+@dataclass(frozen=True)
+class ResourceProfile:
+    cpus: float
+    mbps: float
+
+    @property
+    def flops(self) -> float:
+        return self.cpus * UNIT_FLOPS
+
+    @property
+    def bytes_per_s(self) -> float:
+        return self.mbps * 1e6 / 8
+
+
+PAPER_PROFILES = [
+    ResourceProfile(4.0, 100.0),
+    ResourceProfile(2.0, 30.0),
+    ResourceProfile(1.0, 30.0),
+    ResourceProfile(0.2, 30.0),
+    ResourceProfile(0.1, 10.0),
+]
+
+CASE1_PROFILES = [  # Table 1 case 1
+    ResourceProfile(2.0, 30.0),
+    ResourceProfile(1.0, 30.0),
+    ResourceProfile(0.2, 30.0),
+]
+CASE2_PROFILES = [  # Table 1 case 2
+    ResourceProfile(4.0, 100.0),
+    ResourceProfile(1.0, 30.0),
+    ResourceProfile(0.1, 10.0),
+]
+
+
+# ---------------------------------------------------------------------------
+# per-tier cost tables
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TierCostTable:
+    """Per-batch costs for each tier m (index 0 = tier 1).
+
+    client_flops[m]  : client-side fwd+bwd FLOPs per batch (incl. aux head)
+    server_flops[m]  : server-side fwd+bwd FLOPs per batch
+    z_bytes[m]       : activation (+label) upload per batch
+    client_param_bytes[m] : client-side model download per round
+    """
+
+    client_flops: np.ndarray
+    server_flops: np.ndarray
+    z_bytes: np.ndarray
+    client_param_bytes: np.ndarray
+    full_flops: float = 0.0        # fwd+bwd FLOPs/batch of the whole model
+    full_param_bytes: float = 0.0  # whole-model parameter bytes
+
+    @property
+    def n_tiers(self) -> int:
+        return len(self.client_flops)
+
+    def d_size(self, m: int, n_batches: int) -> float:
+        """Paper's D_size(m): per-batch transferred bytes (model download
+        amortized over the round's batches)."""
+        return self.z_bytes[m] + self.client_param_bytes[m] / max(n_batches, 1)
+
+
+def resnet_tier_costs(cfg, batch_size: int) -> TierCostTable:
+    """Analytic conv FLOPs for the paper's ResNet-56/110 module splits."""
+    from repro.models import resnet as R
+
+    plan = R._block_plan(cfg)
+    hw = cfg.image_size * cfg.image_size
+
+    def block_flops(b, hw_in):
+        # three convs (1x1, 3x3, 1x1) + optional downsample, x2 for MACs
+        hw_out = hw_in // (b["stride"] ** 2)
+        f = 2 * hw_out * (
+            b["cin"] * b["mid"] + 9 * b["mid"] * b["mid"] + b["mid"] * b["cout"]
+        )
+        if b["down"]:
+            f += 2 * hw_out * b["cin"] * b["cout"]
+        return f, hw_out
+
+    stem_flops = 2 * hw * 3 * cfg.width * 9
+    per_block, hws = [], []
+    cur = hw
+    for b in plan:
+        f, cur = block_flops(b, cur)
+        per_block.append(f)
+        hws.append(cur)
+
+    def params_of(b):
+        p = b["cin"] * b["mid"] + 9 * b["mid"] * b["mid"] + b["mid"] * b["cout"]
+        if b["down"]:
+            p += b["cin"] * b["cout"]
+        return p
+
+    n_tiers = cfg.n_modules - 1
+    cf, sf, zb, pb = [], [], [], []
+    total_fwd = stem_flops + sum(per_block)
+    for tier in range(1, n_tiers + 1):
+        nb = R.n_blocks_in_modules(cfg, tier)
+        c_fwd = stem_flops + sum(per_block[:nb])
+        s_fwd = total_fwd - c_fwd
+        cout = R.aux_channels(cfg, tier)
+        hw_out = hws[nb - 1] if nb else hw
+        cf.append(3.0 * batch_size * (c_fwd + 2 * cout * cfg.n_classes))  # fwd+bwd ~3x
+        sf.append(3.0 * batch_size * (s_fwd + 2 * 16 * cfg.width * cfg.n_classes))
+        zb.append(batch_size * hw_out * cout * BYTES_PER_PARAM + batch_size * 4)
+        stem_p = 27 * cfg.width
+        c_params = stem_p + sum(params_of(b) for b in plan[:nb]) + cout * cfg.n_classes
+        pb.append(c_params * BYTES_PER_PARAM)
+    full_flops = 3.0 * batch_size * (total_fwd + 2 * 16 * cfg.width * cfg.n_classes)
+    full_params = 27 * cfg.width + sum(params_of(b) for b in plan) + 16 * cfg.width * cfg.n_classes
+    raw = np.array(cf, float)
+    cf = _with_client_overhead(raw)
+    overhead = float(cf[0] - raw[0])
+    return TierCostTable(
+        cf, np.array(sf), np.array(zb), np.array(pb),
+        # a full-model client pays the same fixed per-batch overhead
+        full_flops=full_flops + overhead,
+        full_param_bytes=full_params * BYTES_PER_PARAM,
+    )
+
+
+# Paper Table 2 (cont.): measured client-side times span only ~3.8x between the
+# extreme tiers — the real system has a large fixed per-batch cost (input
+# pipeline, framework overhead, aux head). We add a flops-equivalent
+# overhead calibrated so tier6/tier1 == 3.81, matching Table 2 exactly.
+TABLE2_RATIO = 3.81
+
+
+def _with_client_overhead(cf: np.ndarray) -> np.ndarray:
+    hi = cf[min(5, len(cf) - 1)]
+    o = max((hi - TABLE2_RATIO * cf[0]) / (TABLE2_RATIO - 1.0), 0.0)
+    return cf + o
+
+
+def transformer_tier_costs(cfg, batch_size: int, seq_len: int) -> TierCostTable:
+    """Per-tier costs for the transformer-family port (6*P*T fwd+bwd rule +
+    quadratic attention term)."""
+    from repro.core import tiering
+    from repro.models import model as M
+
+    tokens = batch_size * seq_len
+    n_tiers = tiering.n_tiers(cfg)
+    bounds = tiering.module_boundaries(cfg.n_layers, cfg.n_modules)
+
+    per_layer = _layer_params(cfg)
+    embed_p = cfg.vocab * cfg.d_model
+    head_p = 0 if cfg.tie_embeddings else cfg.vocab * cfg.d_model
+    attn_flops = (
+        0
+        if cfg.family == "ssm"
+        else 4 * tokens * min(seq_len, cfg.window or seq_len) * cfg.n_heads * cfg.resolved_head_dim
+    )
+
+    cf, sf, zb, pb = [], [], [], []
+    head_params = head_p if head_p else embed_p  # tied models still pay head FLOPs
+    for tier in range(1, n_tiers + 1):
+        s = bounds[tier - 1]
+        c_active = _active_layer_params(cfg) * s
+        s_active = _active_layer_params(cfg) * (cfg.n_layers - s)
+        aux_p = cfg.d_model * cfg.vocab  # auxiliary local head
+        cf.append(6.0 * (c_active + aux_p) * tokens + 3 * attn_flops * s / cfg.n_layers)
+        sf.append(
+            6.0 * (s_active + head_params) * tokens
+            + 3 * attn_flops * (cfg.n_layers - s) / cfg.n_layers
+        )
+        zb.append(tokens * cfg.d_model * 2 + tokens * 4)  # bf16 activations + labels
+        pb.append((per_layer * s + embed_p) * BYTES_PER_PARAM)
+    from repro.models import model as Mm
+
+    full_active = Mm.count_params_analytic(cfg, active_only=True)
+    full_total = Mm.count_params_analytic(cfg)
+    raw = np.array(cf, float)
+    cf_adj = _with_client_overhead(raw)
+    overhead = float(cf_adj[0] - raw[0])
+    return TierCostTable(
+        cf_adj, np.array(sf), np.array(zb), np.array(pb),
+        full_flops=6.0 * full_active * tokens + 3 * attn_flops + overhead,
+        full_param_bytes=full_total * BYTES_PER_PARAM,
+    )
+
+
+def _layer_params(cfg) -> int:
+    from repro.models import model as M
+
+    total = M.count_params_analytic(cfg)
+    embed = cfg.vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    return max((total - embed) // cfg.n_layers, 1)
+
+
+def _active_layer_params(cfg) -> int:
+    from repro.models import model as M
+
+    total = M.count_params_analytic(cfg, active_only=True)
+    embed = cfg.vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    return max((total - embed) // cfg.n_layers, 1)
+
+
+# ---------------------------------------------------------------------------
+# round-time simulation (Eq. 5)
+# ---------------------------------------------------------------------------
+
+def simulate_client_times(
+    costs: TierCostTable,
+    tier: int,
+    profile: ResourceProfile,
+    n_batches: int,
+    *,
+    server_flops: float = SERVER_FLOPS,
+    n_sharing: int = 1,
+) -> dict:
+    """Ground-truth times for one client & tier (0-based tier index).
+
+    ``n_sharing``: how many clients' server-side models the (finite) server
+    trains concurrently this round — its capacity is divided among them."""
+    t_c = costs.client_flops[tier] * n_batches / profile.flops
+    t_com = costs.d_size(tier, n_batches) * n_batches / profile.bytes_per_s
+    t_s = costs.server_flops[tier] * n_batches / (server_flops / max(n_sharing, 1))
+    return {
+        "client": t_c,
+        "comm": t_com,
+        "server": t_s,
+        "total": max(t_c + t_com, t_s + t_com),  # Eq. (5)
+    }

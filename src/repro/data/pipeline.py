@@ -1,0 +1,47 @@
+"""Client-local data pipeline: label pools -> shuffled minibatches.
+
+A ``ClientDataset`` owns a client's partition indices, materializes samples
+lazily per batch (templates + noise are regenerated deterministically from
+the epoch seed, so no dataset-sized arrays are held), and yields dict batches
+compatible with the training steps.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.synthetic import ClassImageTask
+
+
+class ClientDataset:
+    def __init__(self, task: ClassImageTask, labels: np.ndarray, indices: np.ndarray,
+                 batch_size: int, seed: int = 0):
+        self.task = task
+        self.labels = labels
+        self.indices = indices
+        self.batch_size = batch_size
+        self.seed = seed
+
+    def __len__(self) -> int:
+        return len(self.indices)
+
+    @property
+    def n_batches(self) -> int:
+        return max(1, len(self.indices) // self.batch_size)
+
+    def epoch(self, epoch_seed: int):
+        rng = np.random.default_rng(self.seed * 100_003 + epoch_seed)
+        order = rng.permutation(self.indices)
+        for i in range(self.n_batches):
+            sel = order[i * self.batch_size : (i + 1) * self.batch_size]
+            if len(sel) == 0:
+                break
+            y = self.labels[sel]
+            x = self.task.sample(y, seed=int(rng.integers(1 << 31)))
+            yield {"images": x, "labels": y.astype(np.int32)}
+
+
+def make_eval_batch(task: ClassImageTask, n: int, seed: int = 1234) -> dict:
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, task.n_classes, n)
+    x = task.sample(y, seed=seed + 1)
+    return {"images": x, "labels": y.astype(np.int32)}

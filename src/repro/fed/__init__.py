@@ -1,0 +1,20 @@
+"""Federated trainers: DTFL + the paper's baselines."""
+from repro.fed.adapter import ResNetAdapter, TransformerAdapter  # noqa: F401
+from repro.fed.client import HeteroEnv, SimClient  # noqa: F401
+from repro.fed.dtfl import DTFLTrainer  # noqa: F401
+from repro.fed.fedavg import FedAvgTrainer  # noqa: F401
+from repro.fed.fedgkt import FedGKTTrainer  # noqa: F401
+from repro.fed.fedyogi import FedYogiTrainer  # noqa: F401
+from repro.fed.splitfed import SplitFedTrainer  # noqa: F401
+from repro.fed.tifl import TiFLTrainer  # noqa: F401
+from repro.fed.dropstrag import DropStragglerTrainer  # noqa: F401
+
+TRAINERS = {
+    "dtfl": DTFLTrainer,
+    "fedavg": FedAvgTrainer,
+    "fedyogi": FedYogiTrainer,
+    "splitfed": SplitFedTrainer,
+    "fedgkt": FedGKTTrainer,
+    "tifl": TiFLTrainer,
+    "drop30": DropStragglerTrainer,
+}

@@ -1,0 +1,184 @@
+"""Model adapters: a uniform interface over the paper's ResNets and the
+assigned transformer archs so every federated algorithm (DTFL + baselines)
+is model-agnostic.
+
+An adapter provides: global init, tier split/merge, the two DTFL local-loss
+objectives, a monolithic objective, eval, and the per-tier cost table used by
+both the time simulator and the scheduler's profiling.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tiering, timemodel
+from repro.core.local_loss import token_xent
+from repro.models import model as M
+from repro.models import resnet as R
+
+Params = Any
+
+
+class DTFLStepState(NamedTuple):
+    client: Params
+    aux: Params
+    server: Params
+    c_opt: Any
+    a_opt: Any
+    s_opt: Any
+
+
+def _xent_logits(logits, labels):
+    return token_xent(logits, labels)
+
+
+def _acc(logits, labels):
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+
+
+# ===========================================================================
+# ResNet adapter (the paper's own models)
+# ===========================================================================
+
+class ResNetAdapter:
+    def __init__(self, cfg, *, cost_cfg=None, dcor_alpha: float = 0.0,
+                 patch_shuffle: bool = False):
+        self.cfg = cfg
+        # time model may price the full-size model; tier count must match
+        cost_cfg = cost_cfg or cfg
+        if cost_cfg.n_modules != cfg.n_modules:
+            import dataclasses
+            cost_cfg = dataclasses.replace(cost_cfg, n_modules=cfg.n_modules)
+        self.cost_cfg = cost_cfg
+        self.n_tiers = cfg.n_modules - 1
+        self.dcor_alpha = dcor_alpha
+        self.patch_shuffle = patch_shuffle
+
+    def init_global(self, key) -> Params:
+        return R.init(key, self.cfg)
+
+    def split(self, params: Params, tier: int):
+        # tier is 0-based here; paper tier m keeps modules md1..md{m+1}
+        return R.split_params(params, self.cfg, tier + 1)
+
+    def merge(self, client: Params, server: Params) -> Params:
+        return R.merge_params(client, server)
+
+    def aux_init(self, key, tier: int) -> Params:
+        return R.aux_init(key, self.cfg, tier + 1)
+
+    # ---- losses ----
+    def client_loss(self, cp: Params, ap: Params, batch: dict, rng=None):
+        z = R.client_forward(cp, self.cfg, batch["images"])
+        if self.patch_shuffle and rng is not None:
+            from repro.privacy import patch_shuffle as ps
+
+            zs = z.reshape(z.shape[0], -1, z.shape[-1])
+            z_up = ps(rng, zs, 16).reshape(z.shape)
+        else:
+            z_up = z
+        logits = R.aux_apply(ap, z)
+        loss = _xent_logits(logits, batch["labels"])
+        if self.dcor_alpha > 0.0:
+            from repro.privacy import dcor
+
+            loss = (1 - self.dcor_alpha) * loss + self.dcor_alpha * dcor(
+                batch["images"], z
+            )
+        return loss, z_up
+
+    def server_loss(self, sp: Params, z: jax.Array, batch: dict, tier: int):
+        logits = R.server_forward(sp, self.cfg, z, tier + 1)
+        return _xent_logits(logits, batch["labels"])
+
+    def full_loss(self, params: Params, batch: dict):
+        return _xent_logits(R.forward(params, self.cfg, batch["images"]), batch["labels"])
+
+    def eval_acc(self, params: Params, batch: dict) -> jax.Array:
+        return _acc(R.forward(params, self.cfg, batch["images"]), batch["labels"])
+
+    # FedGKT hooks
+    def client_features(self, cp: Params, batch: dict):
+        return R.client_forward(cp, self.cfg, batch["images"])
+
+    def aux_logits(self, ap: Params, z) -> jax.Array:
+        return R.aux_apply(ap, z)
+
+    def server_logits(self, sp: Params, z, tier: int) -> jax.Array:
+        return R.server_forward(sp, self.cfg, z, tier + 1)
+
+    def tier_costs(self, batch_size: int) -> timemodel.TierCostTable:
+        return timemodel.resnet_tier_costs(self.cost_cfg, batch_size)
+
+
+# ===========================================================================
+# Transformer adapter (assigned archs)
+# ===========================================================================
+
+class TransformerAdapter:
+    def __init__(self, cfg, *, seq_len: int, cost_cfg=None, dcor_alpha: float = 0.0):
+        # DTFL split training unties embeddings (DESIGN.md): the halves live
+        # on different hosts.
+        self.cfg = cfg.replace(tie_embeddings=False)
+        cost_cfg = (cost_cfg or cfg).replace(tie_embeddings=False)
+        if cost_cfg.n_modules != self.cfg.n_modules:
+            cost_cfg = cost_cfg.replace(n_modules=self.cfg.n_modules)
+        self.cost_cfg = cost_cfg
+        self.seq_len = seq_len
+        self.n_tiers = tiering.n_tiers(self.cfg)
+        self.dcor_alpha = dcor_alpha
+
+    def init_global(self, key) -> Params:
+        return M.init(key, self.cfg)
+
+    def split(self, params: Params, tier: int):
+        return tiering.split_params(params, self.cfg, tier + 1)
+
+    def merge(self, client: Params, server: Params) -> Params:
+        return tiering.merge_params(client, server)
+
+    def aux_init(self, key, tier: int) -> Params:
+        return M.aux_head_init(key, self.cfg)
+
+    def client_loss(self, cp: Params, ap: Params, batch: dict, rng=None):
+        z, moe_aux = M.client_forward(cp, self.cfg, batch)
+        logits = M.aux_head_apply(ap, self.cfg, z)
+        loss = _xent_logits(logits, batch["labels"]) + 0.01 * moe_aux
+        if self.dcor_alpha > 0.0:
+            from repro.privacy import dcor
+
+            x_in = M.embed_tokens(cp, self.cfg, batch)
+            zz = z[0] if isinstance(z, tuple) else z
+            loss = (1 - self.dcor_alpha) * loss + self.dcor_alpha * dcor(x_in, zz)
+        return loss, z
+
+    def server_loss(self, sp: Params, z, batch: dict, tier: int):
+        logits, moe_aux = M.server_forward(sp, self.cfg, z)
+        return _xent_logits(logits, batch["labels"]) + 0.01 * moe_aux
+
+    def full_loss(self, params: Params, batch: dict):
+        logits, moe_aux = M.forward(params, self.cfg, batch)
+        return _xent_logits(logits, batch["labels"]) + 0.01 * moe_aux
+
+    def eval_acc(self, params: Params, batch: dict) -> jax.Array:
+        logits, _ = M.forward(params, self.cfg, batch)
+        return _acc(logits, batch["labels"])
+
+    def tier_costs(self, batch_size: int) -> timemodel.TierCostTable:
+        return timemodel.transformer_tier_costs(self.cost_cfg, batch_size, self.seq_len)
+
+    # FedGKT hooks
+    def client_features(self, cp: Params, batch: dict):
+        z, _ = M.client_forward(cp, self.cfg, batch)
+        return z
+
+    def aux_logits(self, ap: Params, z) -> jax.Array:
+        return M.aux_head_apply(ap, self.cfg, z)
+
+    def server_logits(self, sp: Params, z, tier: int) -> jax.Array:
+        logits, _ = M.server_forward(sp, self.cfg, z)
+        return logits

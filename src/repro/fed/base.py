@@ -1,0 +1,103 @@
+"""Shared machinery for the baseline federated trainers (paper Sec. 4.1).
+
+All baselines consume the same adapter / clients / env / synthetic clock as
+DTFLTrainer so Table-3 style comparisons are apples-to-apples: identical
+model, partitions, eval batch; only the algorithm and its time profile vary.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation, timemodel
+from repro.fed.client import HeteroEnv, SimClient
+from repro.fed.dtfl import RoundLog
+
+
+def kd_loss(student_logits: jax.Array, teacher_logits: jax.Array, temp: float = 1.0) -> jax.Array:
+    """KL(teacher || student) with temperature."""
+    t = jax.nn.softmax(teacher_logits.astype(jnp.float32) / temp, -1)
+    ls = jax.nn.log_softmax(student_logits.astype(jnp.float32) / temp, -1)
+    lt = jax.nn.log_softmax(teacher_logits.astype(jnp.float32) / temp, -1)
+    return jnp.mean(jnp.sum(t * (lt - ls), -1)) * temp * temp
+
+
+class BaseTrainer:
+    """Round loop scaffolding; subclasses implement train_round()."""
+
+    name = "base"
+
+    def __init__(self, adapter, clients: list[SimClient], env: HeteroEnv, optimizer,
+                 *, seed: int = 0, local_epochs: int = 1,
+                 server_flops: float = timemodel.SERVER_FLOPS):
+        self.adapter = adapter
+        self.clients = clients
+        self.env = env
+        self.opt = optimizer
+        self.local_epochs = local_epochs
+        self.server_flops = server_flops
+        self.key = jax.random.PRNGKey(seed)
+        self.params = adapter.init_global(self._next_key())
+        self.costs = adapter.tier_costs(clients[0].dataset.batch_size)
+
+    def _next_key(self):
+        self.key, k = jax.random.split(self.key)
+        return k
+
+    # ------------------------------------------------------------------
+    def train_round(self, r: int, participants: list[int]) -> float:
+        raise NotImplementedError
+
+    def run(self, n_rounds: int, eval_batch: dict, *, target_acc: float | None = None,
+            participation: float = 1.0, eval_every: int = 1, verbose: bool = False
+            ) -> list[RoundLog]:
+        rng = np.random.default_rng(0)
+        eval_batch = {k: jnp.asarray(v) for k, v in eval_batch.items()}
+        eval_fn = jax.jit(self.adapter.eval_acc)
+        clock, logs = 0.0, []
+        n_part = max(1, int(participation * len(self.clients)))
+        for r in range(n_rounds):
+            participants = sorted(rng.choice(len(self.clients), n_part, replace=False).tolist())
+            self.env.maybe_switch(r)
+            straggler = self.train_round(r, participants)
+            clock += straggler
+            acc = float(eval_fn(self.params, eval_batch)) if r % eval_every == 0 else (
+                logs[-1].acc if logs else 0.0)
+            logs.append(RoundLog(r, clock, acc, {}, straggler))
+            if verbose:
+                print(f"[{self.name}] r={r} clock={clock:.0f}s acc={acc:.3f}")
+            if target_acc is not None and acc >= target_acc:
+                break
+        return logs
+
+    # ------------------------------------------------------------------
+    # time helpers (analytic, from the shared cost table)
+    # ------------------------------------------------------------------
+    def _full_model_time(self, cid: int, n_batches: int) -> float:
+        """FedAvg-style: the client trains the ENTIRE model locally."""
+        prof = self.env.profile(cid)
+        compute = self.costs.full_flops * n_batches * self.local_epochs / prof.flops
+        comm = 2.0 * self.costs.full_param_bytes / prof.bytes_per_s
+        return compute + comm
+
+    def _local_full_steps(self, r: int, cid: int, params):
+        """Run local_epochs of full-model SGD for one client; returns params."""
+        if not hasattr(self, "_full_step"):
+            ad, opt = self.adapter, self.opt
+
+            @jax.jit
+            def step(p, o, batch):
+                loss, g = jax.value_and_grad(lambda q: ad.full_loss(q, batch))(p)
+                p, o = opt.update(p, g, o)
+                return p, o, loss
+
+            self._full_step = step
+        o = self.opt.init(params)
+        for e in range(self.local_epochs):
+            for batch in self.clients[cid].dataset.epoch(r * 131 + e):
+                batch = {k: jnp.asarray(v) for k, v in batch.items()}
+                params, o, _ = self._full_step(params, o, batch)
+        return params

@@ -1,0 +1,32 @@
+"""Straggler-dropping FedAvg (Bonawitz et al. 2019, discussed in the paper's
+related work): each round waits only for the fastest (1 - drop_frac) of the
+participants and discards the rest — fast rounds, but the slowest clients'
+data never contributes, which hurts non-IID accuracy. Reference baseline
+showing why DTFL's keep-everyone-via-offloading is the better trade.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import aggregation
+from repro.fed.base import BaseTrainer
+
+
+class DropStragglerTrainer(BaseTrainer):
+    name = "drop30"
+
+    def __init__(self, *args, drop_frac: float = 0.3, **kw):
+        super().__init__(*args, **kw)
+        self.drop_frac = drop_frac
+
+    def train_round(self, r: int, participants: list[int]) -> float:
+        times = {k: self._full_model_time(k, self.clients[k].n_batches)
+                 for k in participants}
+        keep_n = max(1, int(np.ceil(len(participants) * (1 - self.drop_frac))))
+        kept = sorted(participants, key=lambda k: times[k])[:keep_n]
+        locals_, weights = [], []
+        for k in kept:
+            locals_.append(self._local_full_steps(r, k, self.params))
+            weights.append(len(self.clients[k].dataset))
+        self.params = aggregation.weighted_average(locals_, weights)
+        return max(times[k] for k in kept)

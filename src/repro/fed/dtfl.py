@@ -1,0 +1,230 @@
+"""The DTFL training loop (Algorithm 1 MainServer, end to end).
+
+Per round:
+  1. TierScheduler assigns every participant a tier (dynamic, from observed
+     times) — or a StaticScheduler for the Table-1 ablations.
+  2. Each client trains (client-side + aux) on its local data while the
+     server trains the client's server-side model on the uploaded z — both
+     inside one jitted step per tier (compiled once, cached).
+  3. Simulated wall-times per client come from the analytic time model and
+     the client's ground-truth resource profile; the scheduler only observes
+     the resulting times (+ the client-reported nu), as in the paper.
+  4. Halves are merged and FedAvg'd with weights N_k/N; per-tier aux heads
+     are averaged within their tier cohort.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation, timemodel
+from repro.core.scheduler import DynamicTierScheduler, StaticScheduler, TierProfile
+from repro.fed.adapter import DTFLStepState
+from repro.fed.client import HeteroEnv, SimClient
+
+
+@dataclass
+class RoundLog:
+    round: int
+    clock: float
+    acc: float
+    assignment: dict[int, int]
+    straggler: float
+
+
+class DTFLTrainer:
+    def __init__(
+        self,
+        adapter,
+        clients: list[SimClient],
+        env: HeteroEnv,
+        optimizer,
+        *,
+        scheduler: str | int = "dynamic",
+        seed: int = 0,
+        local_epochs: int = 1,
+        server_flops: float = timemodel.SERVER_FLOPS,
+    ):
+        self.adapter = adapter
+        self.clients = clients
+        self.env = env
+        self.opt = optimizer
+        self.local_epochs = local_epochs
+        self.server_flops = server_flops
+        self.key = jax.random.PRNGKey(seed)
+        self.params = adapter.init_global(self._next_key())
+        self.costs = adapter.tier_costs(clients[0].dataset.batch_size)
+        profile = TierProfile.from_cost_table(
+            self.costs,
+            clients[0].n_batches,
+            ref_flops=timemodel.UNIT_FLOPS,
+            server_flops=server_flops,
+        )
+        if scheduler == "dynamic":
+            self.sched = DynamicTierScheduler(profile, len(clients))
+        elif isinstance(scheduler, str) and scheduler.startswith("dynamic:"):
+            m = int(scheduler.split(":")[1])  # M-tier deployment (Table 11)
+            allowed = list(range(adapter.n_tiers))[-m:]
+            self.sched = DynamicTierScheduler(profile, len(clients), allowed=allowed)
+        else:
+            self.sched = StaticScheduler(int(scheduler), len(clients))
+        # per-tier aux heads, persistent and aggregated within tier cohorts
+        self.aux = {
+            m: adapter.aux_init(self._next_key(), m) for m in range(adapter.n_tiers)
+        }
+        self._step_cache: dict[int, callable] = {}
+
+    # ------------------------------------------------------------------
+    def _next_key(self):
+        self.key, k = jax.random.split(self.key)
+        return k
+
+    def _tier_step(self, tier: int):
+        if tier not in self._step_cache:
+            ad, opt = self.adapter, self.opt
+
+            @jax.jit
+            def step(state: DTFLStepState, batch: dict):
+                (closs, z), (cg, ag) = jax.value_and_grad(
+                    lambda cp, ap: ad.client_loss(cp, ap, batch), argnums=(0, 1),
+                    has_aux=True,
+                )(state.client, state.aux)
+                z = jax.lax.stop_gradient(z)
+                sloss, sg = jax.value_and_grad(
+                    lambda sp: ad.server_loss(sp, z, batch, tier)
+                )(state.server)
+                c, co = opt.update(state.client, cg, state.c_opt)
+                a, ao = opt.update(state.aux, ag, state.a_opt)
+                s, so = opt.update(state.server, sg, state.s_opt)
+                return DTFLStepState(c, a, s, co, ao, so), (closs, sloss)
+
+            self._step_cache[tier] = step
+        return self._step_cache[tier]
+
+    # ------------------------------------------------------------------
+    def train_round(self, r: int, participants: list[int]) -> tuple[float, dict[int, int]]:
+        self.env.maybe_switch(r)
+        assign = self.sched.schedule(participants)
+        merged, weights, times = [], [], []
+        for k in participants:
+            tier = assign[k]
+            cl = self.clients[k]
+            cp, sp = self.adapter.split(self.params, tier)
+            state = DTFLStepState(
+                cp, self.aux[tier], sp,
+                self.opt.init(cp), self.opt.init(self.aux[tier]), self.opt.init(sp),
+            )
+            step = self._tier_step(tier)
+            for e in range(self.local_epochs):
+                for batch in cl.dataset.epoch(r * 131 + e):
+                    batch = {k2: jnp.asarray(v) for k2, v in batch.items()}
+                    state, _ = step(state, batch)
+            self.aux[tier] = state.aux
+            merged.append(self.adapter.merge(state.client, state.server))
+            weights.append(len(cl.dataset))
+            t = timemodel.simulate_client_times(
+                self.costs, tier, self.env.profile(k), cl.n_batches,
+                server_flops=self.server_flops, n_sharing=len(participants),
+            )
+            times.append(t["total"])
+            self.sched.observe(
+                k, tier=tier, total_client_time=t["client"] + t["comm"],
+                nu=self.env.profile(k).bytes_per_s, n_batches=cl.n_batches,
+            )
+        self.params = aggregation.weighted_average(merged, weights)
+        # aggregate aux heads within tier cohorts
+        by_tier: dict[int, list[int]] = {}
+        for k in participants:
+            by_tier.setdefault(assign[k], []).append(k)
+        return max(times), assign
+
+    # ------------------------------------------------------------------
+    # checkpointing (server state: global params + per-tier aux heads +
+    # scheduler EMA history)
+    # ------------------------------------------------------------------
+    def save(self, path: str) -> None:
+        from repro import checkpoint as ckpt
+        from repro.core.scheduler import DynamicTierScheduler
+
+        state = {"params": self.params,
+                 "aux": {str(k): v for k, v in self.aux.items()}}
+        if isinstance(self.sched, DynamicTierScheduler):
+            import numpy as np
+
+            ema_t, ema_v = [], []
+            for cid, cl in enumerate(self.sched.clients):
+                for tier, ema in cl.ema.items():
+                    ema_t.append([cid, tier])
+                    ema_v.append(ema.value)
+            state["sched"] = {
+                "tiers": np.array([c.tier for c in self.sched.clients]),
+                "nu": np.array([c.nu for c in self.sched.clients]),
+                "nb": np.array([c.n_batches for c in self.sched.clients]),
+                "obs": np.array([-1 if c.last_obs_tier is None else c.last_obs_tier
+                                 for c in self.sched.clients]),
+                "ema_keys": np.array(ema_t or [[0, 0]][:0]).reshape(-1, 2),
+                "ema_vals": np.array(ema_v),
+            }
+        ckpt.save(path, state)
+
+    def restore(self, path: str) -> None:
+        from repro import checkpoint as ckpt
+        from repro.core.scheduler import EMA, DynamicTierScheduler
+
+        state = ckpt.load(path)
+        self.params = state["params"]
+        self.aux = {int(k): v for k, v in state["aux"].items()}
+        if "sched" in state and isinstance(self.sched, DynamicTierScheduler):
+            sc = state["sched"]
+            for cid, cl in enumerate(self.sched.clients):
+                cl.tier = int(sc["tiers"][cid])
+                cl.nu = float(sc["nu"][cid])
+                cl.n_batches = int(sc["nb"][cid])
+                obs = int(sc["obs"][cid])
+                cl.last_obs_tier = None if obs < 0 else obs
+            for (cid, tier), v in zip(sc["ema_keys"], sc["ema_vals"]):
+                e = EMA()
+                e.value = float(v)
+                self.sched.clients[int(cid)].ema[int(tier)] = e
+
+    # ------------------------------------------------------------------
+    def run(
+        self,
+        n_rounds: int,
+        eval_batch: dict,
+        *,
+        target_acc: float | None = None,
+        participation: float = 1.0,
+        eval_every: int = 1,
+        verbose: bool = False,
+        checkpoint_path: str | None = None,
+        checkpoint_every: int = 10,
+    ) -> list[RoundLog]:
+        rng = np.random.default_rng(0)
+        eval_batch = {k: jnp.asarray(v) for k, v in eval_batch.items()}
+        eval_fn = jax.jit(self.adapter.eval_acc)
+        clock, logs = 0.0, []
+        n_part = max(1, int(participation * len(self.clients)))
+        for r in range(n_rounds):
+            participants = sorted(
+                rng.choice(len(self.clients), n_part, replace=False).tolist()
+            )
+            straggler, assign = self.train_round(r, participants)
+            clock += straggler
+            acc = float(eval_fn(self.params, eval_batch)) if r % eval_every == 0 else (
+                logs[-1].acc if logs else 0.0
+            )
+            logs.append(RoundLog(r, clock, acc, assign, straggler))
+            if verbose:
+                print(f"[dtfl] r={r} clock={clock:.0f}s acc={acc:.3f} tiers={sorted(set(assign.values()))}")
+            if checkpoint_path and (r + 1) % checkpoint_every == 0:
+                self.save(checkpoint_path)
+            if target_acc is not None and acc >= target_acc:
+                break
+        if checkpoint_path:
+            self.save(checkpoint_path)
+        return logs

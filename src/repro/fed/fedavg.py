@@ -1,0 +1,23 @@
+"""FedAvg (McMahan et al. 2017): full-model local training + weighted average.
+
+Every client trains the whole global model — the paper's point is that the
+straggler (slowest full-model client) bounds the round, which DTFL avoids.
+"""
+from __future__ import annotations
+
+from repro.core import aggregation
+from repro.fed.base import BaseTrainer
+
+
+class FedAvgTrainer(BaseTrainer):
+    name = "fedavg"
+
+    def train_round(self, r: int, participants: list[int]) -> float:
+        locals_, weights, times = [], [], []
+        for k in participants:
+            p = self._local_full_steps(r, k, self.params)
+            locals_.append(p)
+            weights.append(len(self.clients[k].dataset))
+            times.append(self._full_model_time(k, self.clients[k].n_batches))
+        self.params = aggregation.weighted_average(locals_, weights)
+        return max(times)

@@ -1,0 +1,125 @@
+"""FedGKT (He et al. 2020a): group knowledge transfer.
+
+Clients train only a SMALL model (client-side feature extractor + aux head)
+with CE + KD against the server's logits; the server trains the LARGE
+server-side model on uploaded features with CE + KD against client logits.
+
+  phase 1: client local training (CE + KD vs last round's server logits)
+  phase 2: upload (z, y, client_logits); server trains on all clients' z
+           (CE + KD vs client logits) and produces fresh server logits,
+           which clients use as the teacher next round.
+
+Client-side split is fixed at md2 (He et al.'s small edge model). Round time
+= max_k(client phase) + server phase — the phases are sequential, which is
+why FedGKT trails DTFL in the paper's Table 3 despite small client models.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation
+from repro.core.local_loss import token_xent
+from repro.fed.base import BaseTrainer, kd_loss
+
+SPLIT_TIER = 1
+KD_WEIGHT = 0.5
+
+
+class FedGKTTrainer(BaseTrainer):
+    name = "fedgkt"
+
+    def __init__(self, *args, **kw):
+        super().__init__(*args, **kw)
+        cp, sp = self.adapter.split(self.params, SPLIT_TIER)
+        self.client_params = cp            # shared (FedAvg'd) edge model
+        self.server_params = sp            # single large server model
+        self.aux = self.adapter.aux_init(self._next_key(), SPLIT_TIER)
+        self.server_opt_state = self.opt.init(sp)
+        self._teacher: dict[tuple[int, int], jax.Array] = {}  # (cid,batch) -> logits
+
+    # ------------------------------------------------------------------
+    def _steps(self):
+        if hasattr(self, "_cstep"):
+            return self._cstep, self._sstep
+        ad, opt = self.adapter, self.opt
+
+        @jax.jit
+        def cstep(cp, ap, co, ao, batch, teacher, use_kd):
+            def loss_fn(cp, ap):
+                z = ad.client_features(cp, batch)
+                logits = ad.aux_logits(ap, z)
+                ce = token_xent(logits, batch["labels"])
+                kd = jnp.where(use_kd, kd_loss(logits, teacher), 0.0)
+                return ce + KD_WEIGHT * kd, (z, logits)
+
+            (_, (z, logits)), (cg, ag) = jax.value_and_grad(
+                loss_fn, (0, 1), has_aux=True
+            )(cp, ap)
+            cp, co = opt.update(cp, cg, co)
+            ap, ao = opt.update(ap, ag, ao)
+            return cp, ap, co, ao, z, logits
+
+        @jax.jit
+        def sstep(sp, so, z, batch, client_logits):
+            def loss_fn(sp):
+                logits = ad.server_logits(sp, z, SPLIT_TIER)
+                ce = token_xent(logits, batch["labels"])
+                return ce + KD_WEIGHT * kd_loss(logits, client_logits), logits
+
+            (_, logits), g = jax.value_and_grad(loss_fn, has_aux=True)(sp)
+            sp, so = opt.update(sp, g, so)
+            return sp, so, logits
+
+        self._cstep, self._sstep = cstep, sstep
+        return cstep, sstep
+
+    # ------------------------------------------------------------------
+    def train_round(self, r: int, participants: list[int]) -> float:
+        cstep, sstep = self._steps()
+        client_updates, weights, client_times, uploads = [], [], [], []
+        for k in participants:
+            cp, ap = self.client_params, self.aux
+            co, ao = self.opt.init(cp), self.opt.init(ap)
+            for e in range(self.local_epochs):
+                for bi, batch in enumerate(self.clients[k].dataset.epoch(r * 131 + e)):
+                    batch = {k2: jnp.asarray(v) for k2, v in batch.items()}
+                    teacher = self._teacher.get((k, bi))
+                    use_kd = teacher is not None
+                    if teacher is None:
+                        teacher = jnp.zeros(
+                            batch["labels"].shape + (self.adapter.cfg.n_classes
+                                                     if hasattr(self.adapter.cfg, "n_classes")
+                                                     else self.adapter.cfg.vocab,),
+                            jnp.float32,
+                        )
+                    cp, ap, co, ao, z, logits = cstep(
+                        cp, ap, co, ao, batch, teacher, jnp.asarray(use_kd)
+                    )
+                    if e == self.local_epochs - 1:
+                        uploads.append((k, bi, z, batch, logits))
+            client_updates.append((cp, ap))
+            weights.append(len(self.clients[k].dataset))
+            prof = self.env.profile(k)
+            nb = self.clients[k].n_batches
+            m = SPLIT_TIER
+            client_times.append(
+                self.costs.client_flops[m] * nb * self.local_epochs / prof.flops
+                + (self.costs.z_bytes[m] * nb + self.costs.client_param_bytes[m])
+                / prof.bytes_per_s
+            )
+        # phase 2: server trains the large model on all uploaded features
+        for k, bi, z, batch, logits in uploads:
+            self.server_params, self.server_opt_state, s_logits = sstep(
+                self.server_params, self.server_opt_state, z, batch, logits
+            )
+            self._teacher[(k, bi)] = s_logits
+        server_time = (
+            self.costs.server_flops[SPLIT_TIER] * len(uploads) / self.server_flops
+        )
+        self.client_params = aggregation.weighted_average(
+            [c for c, _ in client_updates], weights
+        )
+        self.aux = aggregation.weighted_average([a for _, a in client_updates], weights)
+        self.params = self.adapter.merge(self.client_params, self.server_params)
+        return max(client_times) + server_time

@@ -1,0 +1,36 @@
+"""FedYogi (Reddi et al. 2020): FedAvg client updates + Yogi server optimizer.
+
+The server treats the negative average client delta as a pseudo-gradient and
+applies the Yogi adaptive update. Client-side time profile equals FedAvg's
+(full model locally).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import aggregation
+from repro.fed.base import BaseTrainer
+from repro import optim
+
+
+class FedYogiTrainer(BaseTrainer):
+    name = "fedyogi"
+
+    def __init__(self, *args, server_lr: float = 0.05, **kw):
+        super().__init__(*args, **kw)
+        self.server_opt = optim.yogi(lr=server_lr)
+        self.server_opt_state = self.server_opt.init(self.params)
+
+    def train_round(self, r: int, participants: list[int]) -> float:
+        locals_, weights, times = [], [], []
+        for k in participants:
+            p = self._local_full_steps(r, k, self.params)
+            locals_.append(p)
+            weights.append(len(self.clients[k].dataset))
+            times.append(self._full_model_time(k, self.clients[k].n_batches))
+        avg = aggregation.weighted_average(locals_, weights)
+        pseudo_grad = jax.tree.map(lambda g, l: g - l, self.params, avg)
+        self.params, self.server_opt_state = self.server_opt.update(
+            self.params, pseudo_grad, self.server_opt_state
+        )
+        return max(times)

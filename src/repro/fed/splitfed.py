@@ -1,0 +1,49 @@
+"""SplitFed (Thapa et al. 2022): split learning + federated aggregation.
+
+The model is split at a FIXED point (the paper uses module md2). Unlike
+DTFL's local-loss training, gradients DO flow server->client, so each batch
+is a synchronous round trip:
+
+  client fwd -> upload z -> server fwd+bwd -> download grad_z -> client bwd
+
+The math equals ordinary backprop through the full model (we compute it as
+one jitted step); the cost model charges the sequential path, which is what
+makes SplitFed slow in the paper's Table 3.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import aggregation
+from repro.fed.base import BaseTrainer
+
+SPLIT_TIER = 1  # 0-based: client keeps md1..md2, the paper's SplitFed split
+
+
+class SplitFedTrainer(BaseTrainer):
+    name = "splitfed"
+
+    def train_round(self, r: int, participants: list[int]) -> float:
+        locals_, weights, times = [], [], []
+        for k in participants:
+            p = self._local_full_steps(r, k, self.params)  # exact same math
+            locals_.append(p)
+            weights.append(len(self.clients[k].dataset))
+            times.append(self._splitfed_time(k, self.clients[k].n_batches))
+        self.params = aggregation.weighted_average(locals_, weights)
+        return max(times)
+
+    def _splitfed_time(self, cid: int, nb: int) -> float:
+        prof = self.env.profile(cid)
+        m = SPLIT_TIER
+        c_fwd = self.costs.client_flops[m] / 3.0          # fwd is ~1/3 of fwd+bwd
+        c_bwd = self.costs.client_flops[m] * 2.0 / 3.0
+        per_batch = (
+            c_fwd / prof.flops
+            + self.costs.z_bytes[m] / prof.bytes_per_s          # z up
+            + self.costs.server_flops[m] / self.server_flops    # server fwd+bwd
+            + self.costs.z_bytes[m] / prof.bytes_per_s          # grad_z down
+            + c_bwd / prof.flops
+        )
+        model_sync = 2.0 * self.costs.client_param_bytes[m] / prof.bytes_per_s
+        return nb * self.local_epochs * per_batch + model_sync

@@ -1,0 +1,49 @@
+"""TiFL-style tier-based client SELECTION (Chai et al. 2020) — the tier-based
+line of work the paper builds on: clients are profiled into speed tiers and
+each round trains clients FROM ONE TIER (rotating by an accuracy credit),
+but every client still trains the FULL model. Included as the reference
+point between FedAvg and DTFL: selection removes intra-round stragglers but
+pays full-model time on slow tiers and skips data every round.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import aggregation
+from repro.fed.base import BaseTrainer
+
+N_TIERS = 3
+
+
+class TiFLTrainer(BaseTrainer):
+    name = "tifl"
+
+    def __init__(self, *args, **kw):
+        super().__init__(*args, **kw)
+        self._speed_obs = {}          # cid -> last full-model time
+        self._round_robin = 0
+
+    def _tiers(self, participants):
+        # profile clients by observed (or estimated) full-model time
+        times = {
+            k: self._speed_obs.get(k, self._full_model_time(k, self.clients[k].n_batches))
+            for k in participants
+        }
+        order = sorted(participants, key=lambda k: times[k])
+        cut = max(1, len(order) // N_TIERS)
+        return [order[i * cut : (i + 1) * cut] or order[-1:] for i in range(N_TIERS)]
+
+    def train_round(self, r: int, participants: list[int]) -> float:
+        tiers = self._tiers(participants)
+        chosen = tiers[self._round_robin % len(tiers)]
+        self._round_robin += 1
+        locals_, weights, times = [], [], []
+        for k in chosen:
+            p = self._local_full_steps(r, k, self.params)
+            locals_.append(p)
+            weights.append(len(self.clients[k].dataset))
+            t = self._full_model_time(k, self.clients[k].n_batches)
+            self._speed_obs[k] = t
+            times.append(t)
+        self.params = aggregation.weighted_average(locals_, weights)
+        return max(times)

@@ -1,0 +1,106 @@
+"""Flash attention Pallas kernel (TPU target, interpret-validated on CPU).
+
+Blockwise causal / sliding-window attention with online softmax:
+  grid = (batch*heads, n_q_blocks, n_kv_blocks)  — the last grid axis is
+  sequential on TPU, so the (m, l, acc) running statistics live in VMEM
+  scratch and accumulate across kv blocks.
+
+Block sizes are MXU-aligned (multiples of 128 on the q/kv axes; head_dim is
+the lane axis). VMEM footprint per program:
+  q (bq, hd) + k,v (bk, hd) + scores (bq, bk) f32 + acc (bq, hd) f32
+  = 128*128*(2+2+2) + 128*128*4*2  ~= 230 KiB  << 16 MiB VMEM.
+
+The pure-jnp oracle is kernels/ref.py::attention_ref; ops.py exposes the
+jit'd wrapper with interpret fallback.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  bq: int, bk: int, causal: bool, window: int, scale: float):
+    i = pl.program_id(1)   # q block
+    j = pl.program_id(2)   # kv block
+    nk = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                   # (bq, hd)
+    k = k_ref[0]                                   # (bk, hd)
+    v = v_ref[0]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                      # (bq, bk)
+
+    qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                            # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                         # (bq, bk)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True, window: int = 0,
+    block_q: int = 128, block_k: int = 128, interpret: bool = True,
+) -> jax.Array:
+    """q, k, v: (BH, S, hd) -> (BH, S, hd). S must divide by the blocks."""
+    BH, S, hd = q.shape
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    scale = 1.0 / math.sqrt(hd)
+    grid = (BH, S // bq, S // bk)
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, causal=causal, window=window, scale=scale
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),   # acc
+            pltpu.VMEM((bq, 1), jnp.float32),    # m (running max)
+            pltpu.VMEM((bq, 1), jnp.float32),    # l (running sum)
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,100 @@
+"""Chunkwise-parallel mLSTM Pallas kernel (xLSTM matrix-memory cell).
+
+Grid = (B*H, n_chunks); the chunk axis is sequential on TPU, so the carried
+matrix memory C (dh, dh) and normalizer n (dh,) live in VMEM scratch and
+flow across chunk programs. Per chunk the kernel does three MXU matmuls
+(scores = q k^T, intra = (scores*D) v, inter = q C) plus the log-space decay
+algebra — the same math as models/ssm.py::_mlstm_chunk_scan (the oracle is
+kernels/ref.py::mlstm_ref).
+
+VMEM per program (P=256, dh=256):
+  q,k,v (P, dh) f32 x3 + D (P, P) + C (dh, dh) + h (P, dh)  ~= 1.3 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, lf_ref, ig_ref, h_ref, C_ref, n_ref, *,
+                  P: int, dh: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        C_ref[...] = jnp.zeros_like(C_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+
+    q = q_ref[0]                                  # (P, dh) f32
+    k = k_ref[0]
+    v = v_ref[0]
+    lf = lf_ref[0]                                # (P,) log forget gates
+    ig = ig_ref[0]                                # (P,) input gates
+
+    cum = jnp.cumsum(lf)                          # log prod f_1..t
+    d_in = jnp.exp(cum)[:, None]                  # decay from chunk start
+    # intra-chunk decay matrix D[t, s] = exp(cum_t - cum_s) * i_s for s <= t
+    diff = cum[:, None] - cum[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (P, P), 0) >= jax.lax.broadcasted_iota(
+        jnp.int32, (P, P), 1
+    )
+    D = jnp.where(tri, jnp.exp(diff) * ig[None, :], 0.0)
+
+    scores = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    intra = jax.lax.dot_general(scores * D, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    C = C_ref[...]
+    inter = jax.lax.dot_general(q, C, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32) * d_in
+    num = intra + inter
+
+    n_intra = jax.lax.dot_general(D, k, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    n_t = d_in * n_ref[...][None, :] + n_intra    # (P, dh)
+    denom = jnp.maximum(jnp.abs(jnp.sum(n_t * q, axis=1, keepdims=True)), 1.0)
+    h_ref[0] = (num / denom).astype(h_ref.dtype)
+
+    # carry state to chunk end
+    w = jnp.exp(cum[-1] - cum) * ig               # (P,)
+    C_ref[...] = jnp.exp(cum[-1]) * C + jax.lax.dot_general(
+        k * w[:, None], v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    n_ref[...] = jnp.exp(cum[-1]) * n_ref[...] + jnp.sum(k * w[:, None], axis=0)
+
+
+def mlstm_chunk(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    log_f: jax.Array, i_gate: jax.Array,
+    *, chunk: int = 256, interpret: bool = True,
+) -> jax.Array:
+    """q,k,v: (BH, S, dh) f32; log_f, i_gate: (BH, S). Returns h (BH, S, dh)."""
+    BH, S, dh = q.shape
+    P = min(chunk, S)
+    while S % P:
+        P -= 1
+    grid = (BH, S // P)
+    kernel = functools.partial(_mlstm_kernel, P=P, dh=dh)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, P, dh), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, P, dh), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, P, dh), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, P), lambda b, j: (b, j)),
+            pl.BlockSpec((1, P), lambda b, j: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, P, dh), lambda b, j: (b, j, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((dh, dh), jnp.float32),
+            pltpu.VMEM((dh,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, log_f, i_gate)

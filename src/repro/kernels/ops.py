@@ -1,0 +1,65 @@
+"""Jit'd wrappers for the Pallas kernels with interpret/TPU dispatch.
+
+On this CPU container kernels always run in interpret mode (the Python body
+executes per grid cell); on TPU backends the same ``pl.pallas_call`` lowers
+to Mosaic. ``ON_TPU`` picks the default.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dcor import dcor_kernelized, pairwise_dist
+from repro.kernels.fused_xent import fused_xent
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mlstm_chunk import mlstm_chunk
+
+ON_TPU = jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window"))
+def flash_attention_op(q, k, v, *, causal: bool = True, window: int = 0):
+    """(B, S, H, hd) layout wrapper: folds heads into the grid batch."""
+    B, S, H, hd = q.shape
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    out = flash_attention(
+        fold(q), fold(k), fold(v), causal=causal, window=window,
+        interpret=not ON_TPU,
+    )
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+
+
+@jax.jit
+def mlstm_chunk_op(q, k, v, log_f, i_gate):
+    """(B, H, S, dh) layout wrapper."""
+    B, H, S, dh = q.shape
+    fold3 = lambda t: t.reshape(B * H, S, dh)
+    fold2 = lambda t: t.reshape(B * H, S)
+    out = mlstm_chunk(
+        fold3(q), fold3(k), fold3(v), fold2(log_f), fold2(i_gate),
+        interpret=not ON_TPU,
+    )
+    return out.reshape(B, H, S, dh)
+
+
+@jax.jit
+def pairwise_dist_op(x):
+    return pairwise_dist(x, interpret=not ON_TPU)
+
+
+@jax.jit
+def dcor_op(x, z):
+    return dcor_kernelized(x, z, interpret=not ON_TPU)
+
+
+@jax.jit
+def fused_xent_op(logits, labels):
+    """Mean token cross-entropy over (..., V) logits without materializing
+    a vocab-sized softmax (kernels/fused_xent.py)."""
+    V = logits.shape[-1]
+    flat = logits.reshape(-1, V)
+    lab = labels.reshape(-1)
+    per_tok = fused_xent(flat, lab, interpret=not ON_TPU)
+    return per_tok.mean()

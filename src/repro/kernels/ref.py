@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for the Pallas kernels (tested allclose in tests/)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """q,k,v: (BH, S, hd) -> (BH, S, hd). Naive full-materialization softmax."""
+    BH, S, hd = q.shape
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / math.sqrt(hd)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def mlstm_ref(q, k, v, log_f, i_gate):
+    """Naive per-step recurrence. q,k,v: (BH, S, dh); gates: (BH, S).
+
+    C_t = f_t C_{t-1} + i_t k_t v_t^T ;  n_t = f_t n_{t-1} + i_t k_t
+    h_t = (q_t^T C_t) / max(|n_t . q_t|, 1)
+    """
+    BH, S, dh = q.shape
+
+    def step(carry, xs):
+        C, n = carry
+        qt, kt, vt, lf, ig = xs
+        f = jnp.exp(lf)[:, None, None]
+        C = f * C + ig[:, None, None] * (kt[:, :, None] * vt[:, None, :])
+        n = f[:, :, 0] * n + ig[:, None] * kt
+        num = jnp.einsum("bde,bd->be", C, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bd,bd->b", n, qt)), 1.0)
+        return (C, n), num / den[:, None]
+
+    C0 = jnp.zeros((BH, dh, dh), jnp.float32)
+    n0 = jnp.zeros((BH, dh), jnp.float32)
+    xs = (
+        q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+        log_f.swapaxes(0, 1), i_gate.swapaxes(0, 1),
+    )
+    _, hs = jax.lax.scan(step, (C0, n0), xs)
+    return hs.swapaxes(0, 1).astype(q.dtype)
+
+
+def pairwise_dist_ref(x):
+    """x: (B, F) -> (B, B)."""
+    x = x.astype(jnp.float32)
+    sq = jnp.sum(x * x, axis=1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (x @ x.T)
+    return jnp.sqrt(jnp.maximum(d2, 1e-12))
+
+
+def fused_xent_ref(logits, labels):
+    """Per-token cross entropy, fp32 stats. logits (T, V); labels (T,)."""
+    import jax.numpy as jnp
+    import jax
+
+    x = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(x, axis=-1)
+    picked = jnp.take_along_axis(x, labels[:, None], axis=-1)[:, 0]
+    return lse - picked

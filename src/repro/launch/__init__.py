@@ -1,0 +1,1 @@
+"""Launcher: production mesh, dry-run driver, training/serving entry points."""

@@ -1,0 +1,191 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh).
+
+For each combination this driver:
+  1. builds the production mesh (single-pod 16x16 or multi-pod 2x16x16),
+  2. lowers + compiles the step (DTFL tier train / prefill / decode) with the
+     baseline shardings from launch/specs.py,
+  3. prints memory_analysis() (proves it fits) and cost_analysis(),
+  4. extracts trip-count-aware FLOPs / HBM bytes / collective bytes from the
+     compiled HLO (launch/hlo_analysis.py) and derives the roofline terms,
+  5. writes a JSON artifact to experiments/dryrun/.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
+from repro.launch import hlo_analysis, specs as S, steps as step_lib
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.models.shardctx import activation_sharding
+
+OUT_DIR = "experiments/dryrun"
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE); decode prices one token."""
+    n_active = M.count_params_analytic(cfg.replace(tie_embeddings=False), active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: one token / sequence
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool, tier: int | None = None,
+            step: str | None = None, save: bool = True, verbose: bool = True,
+            preset: str = "baseline", pad_vocab: int = 0) -> dict:
+    cfg = get_config(arch)
+    if pad_vocab:
+        cfg = cfg.replace(pad_vocab_multiple=pad_vocab)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    builder = step_lib.builder_for(shape, step)
+    kw = {}
+    if builder is step_lib.build_dtfl_train:
+        if tier is not None:
+            kw["tier"] = tier
+        kw["preset"] = preset
+    if builder is step_lib.build_decode and preset != "baseline":
+        kw["preset"] = preset
+    built = builder(cfg, shape, mesh, **kw)
+
+    t0 = time.time()
+    with mesh:
+        with activation_sharding(**_named(mesh, built["act_specs"])):
+            jitted = jax.jit(
+                built["fn"],
+                in_shardings=_named(mesh, built["in_specs"]),
+                out_shardings=_named(mesh, built["out_specs"]),
+                donate_argnums=built["donate"],
+            )
+            lowered = jitted.lower(*built["args"])
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    hlo = hlo_analysis.analyze(txt)
+    terms = hlo_analysis.roofline_terms(hlo)
+    mf = model_flops(built["cfg"], shape)
+    n_dev = mesh.devices.size
+    useful = mf / n_dev / max(hlo["flops"], 1.0)
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_dev,
+        "step": step or shape.kind,
+        "preset": preset + ("+padvocab" if pad_vocab else ""),
+        "tier": kw.get("tier", step_lib.DEFAULT_TIER if shape.kind == "train" else None),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+        },
+        "cost_analysis": {
+            "flops_flat": ca.get("flops"),
+            "bytes_flat": ca.get("bytes accessed"),
+        },
+        "hlo_per_device": {
+            "flops": hlo["flops"],
+            "hbm_bytes": hlo["bytes"],
+            "collective_bytes": hlo["collective_bytes_total"],
+            "collectives": hlo["coll"],
+        },
+        "roofline": terms,
+        "model_flops_total": mf,
+        "useful_flops_ratio": useful,
+    }
+    if verbose:
+        peak = (
+            max(terms["compute_s"], terms["memory_s"], terms["collective_s"])
+        )
+        print(
+            f"[dryrun] {arch:24s} {shape_name:12s} mesh={rec['mesh']:8s} "
+            f"lower={t_lower:5.1f}s compile={t_compile:6.1f}s "
+            f"args/dev={ma.argument_size_in_bytes/2**30:6.2f}GiB "
+            f"temp/dev={ma.temp_size_in_bytes/2**30:6.2f}GiB "
+            f"t_comp={terms['compute_s']*1e3:8.2f}ms t_mem={terms['memory_s']*1e3:8.2f}ms "
+            f"t_coll={terms['collective_s']*1e3:8.2f}ms dom={terms['dominant']}"
+        )
+    if save:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        suffix = "_mp" if multi_pod else ""
+        tag = f"{arch}_{shape_name}{suffix}" + (f"_{step}" if step else "")
+        if preset != "baseline":
+            tag += f"_{preset}"
+        if pad_vocab:
+            tag += f"_pv{pad_vocab}"
+        with open(f"{OUT_DIR}/{tag}.json", "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ASSIGNED_ARCHS)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true", help="all (arch x shape) combos")
+    ap.add_argument("--tier", type=int, default=None)
+    ap.add_argument("--step", choices=list(step_lib.BUILDERS), default=None)
+    ap.add_argument("--no-save", action="store_true")
+    ap.add_argument("--preset", default="baseline", choices=["baseline", "seqpar", "megatron_sp", "serve_dp", "serve_seq"])
+    ap.add_argument("--pad-vocab", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    combos = (
+        [(a, s) for a in ASSIGNED_ARCHS for s in INPUT_SHAPES]
+        if args.all
+        else [(args.arch, args.shape)]
+    )
+    failures = []
+    for arch, shape in combos:
+        try:
+            run_one(arch, shape, multi_pod=args.multi_pod, tier=args.tier,
+                    step=args.step, save=not args.no_save, preset=args.preset,
+                    pad_vocab=args.pad_vocab)
+        except Exception as e:  # noqa: BLE001
+            failures.append((arch, shape, repr(e)))
+            print(f"[dryrun] FAIL {arch} {shape}: {e}")
+            traceback.print_exc()
+    if failures:
+        print(f"[dryrun] {len(failures)} failures")
+        sys.exit(1)
+    print(f"[dryrun] all {len(combos)} combination(s) lowered + compiled OK")
+
+
+if __name__ == "__main__":
+    main()

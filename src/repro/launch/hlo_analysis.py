@@ -1,0 +1,299 @@
+"""Trip-count-aware roofline extraction from compiled HLO text.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE regardless of its
+trip count (verified empirically — DESIGN.md §7), which under-counts
+scan-over-layers models by ~L x. This module re-derives the three roofline
+inputs directly from ``compiled.as_text()``:
+
+  * dot FLOPs           — every `dot` op: 2 * prod(result dims) * contracted
+  * HBM byte traffic    — per op: result bytes + operand bytes (the
+                          HloCostAnalysis convention), fusions counted at
+                          their boundary (internals excluded)
+  * collective bytes    — result-shape bytes of all-gather / all-reduce /
+                          reduce-scatter / all-to-all / collective-permute
+                          (all-reduce weighted 2x for the ring's
+                          reduce-scatter + all-gather phases)
+
+All three are aggregated recursively through `while` ops using the
+`known_trip_count` the compiler records in backend_config. Conditionals are
+counted once (max branch would be tighter; branches here are tiny).
+Numbers are PER DEVICE (SPMD module is per-partition).
+"""
+from __future__ import annotations
+
+import json
+import math
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# ops HloCostAnalysis treats as free (no real data movement)
+_FREE_OPS = {"get-tuple-element", "tuple", "parameter", "constant", "bitcast",
+             "after-all", "partition-id", "replica-id"}
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string; tuples summed."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+VMEM_RESIDENT = 4 * 2**20  # operands smaller than this are assumed to stay
+                           # VMEM-resident across loop iterations
+
+
+@dataclass
+class CompStats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    resident_bytes: float = 0.0  # small-operand reads, counted once per loop
+    coll_bytes: dict = field(default_factory=dict)
+    while_calls: list = field(default_factory=list)  # (body_name, trip)
+    cond_calls: list = field(default_factory=list)   # branch computation names
+    fusion_calls: list = field(default_factory=list) # called computations (flops only)
+    fusion_ops: list = field(default_factory=list)   # (called, res_b, min_op_b, sum_op_b)
+    has_slicing: bool = False
+
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT )?(%[\w\.\-]+) = ((?:\([^)]*\)|[\w\[\],\{\}]+?)) ([\w\-]+)\((.*)$"
+)
+# computation headers start at column 0: "%name (params) -> type {" / "ENTRY ..."
+_COMP_HDR = re.compile(r"^(ENTRY )?(%?[\w\.\-]+)\s*\(")
+
+
+def parse_hlo(txt: str) -> tuple[dict[str, CompStats], str]:
+    """Returns ({computation: stats}, entry_name)."""
+    comps: dict[str, CompStats] = {}
+    entry = None
+    cur: CompStats | None = None
+    cur_name = None
+    symtab: dict[str, str] = {}
+
+    for raw in txt.splitlines():
+        line = raw.rstrip()
+        hdr = _COMP_HDR.match(line) if not raw.startswith(" ") else None
+        if hdr and line.endswith("{") and " -> " in line:
+            cur_name = hdr.group(2).lstrip("%")
+            cur = comps.setdefault(cur_name, CompStats())
+            if hdr.group(1):
+                entry = cur_name
+            symtab = {}
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        res_name, res_type, opcode, rest = m.groups()
+        symtab[res_name] = res_type
+        res_bytes = _shape_bytes(res_type)
+
+        # operand bytes: resolve %refs in the argument list before attrs
+        arg_str = rest.split("), ")[0]
+        operand_bytes = 0
+        resident_bytes = 0
+        operand_types = []
+        for ref in re.findall(r"%[\w\.\-]+", arg_str):
+            t = symtab.get(ref)
+            if t:
+                b = _shape_bytes(t)
+                if b < VMEM_RESIDENT:
+                    resident_bytes += b
+                else:
+                    operand_bytes += b
+                operand_types.append(t)
+        cur.resident_bytes += resident_bytes
+
+        if opcode.startswith("fusion"):
+            # boundary traffic only; FLOPs recursed; slicing fusions fixed in
+            # _finalize_fusion_bytes (count window, not whole buffers)
+            mfc = re.search(r"calls=(%[\w\.\-]+)", line)
+            called = mfc.group(1).lstrip("%") if mfc else ""
+            all_ops = [_shape_bytes(t) for t in operand_types] or [0]
+            cur.fusion_ops.append(
+                (called, res_bytes, min(all_ops), res_bytes + sum(all_ops))
+            )
+            if called:
+                cur.fusion_calls.append(called)
+        elif opcode == "while":
+            tc = 1
+            mt = re.search(r'known_trip_count[\\"={:]+n[\\"]*[:=][\\"]*(\d+)', line)
+            if mt:
+                tc = int(mt.group(1))
+            mb = re.search(r"body=(%[\w\.\-]+)", line)
+            if mb:
+                cur.while_calls.append((mb.group(1).lstrip("%"), tc))
+        elif opcode == "conditional":
+            for mb in re.finditer(r"(?:branch_computations=\{([^}]*)\}|"
+                                  r"(?:true|false)_computation=(%[\w\.\-]+))", line):
+                grp = mb.group(1) or mb.group(2) or ""
+                for name in re.findall(r"%?([\w\.\-]+)", grp):
+                    cur.cond_calls.append(name)
+        elif opcode == "dot":
+            flops = _dot_flops(line, res_type, operand_types)
+            cur.flops += flops
+            cur.bytes += res_bytes + operand_bytes
+        elif opcode == "convolution":
+            cur.flops += _conv_flops(line, res_type, operand_types)
+            cur.bytes += res_bytes + operand_bytes
+        elif any(opcode.startswith(c) for c in _COLLECTIVES):
+            base = next(c for c in _COLLECTIVES if opcode.startswith(c))
+            if opcode.endswith("-done"):
+                continue  # counted at -start
+            w = 2.0 if base == "all-reduce" else 1.0
+            cur.coll_bytes[base] = cur.coll_bytes.get(base, 0.0) + w * res_bytes
+            cur.bytes += res_bytes + operand_bytes
+        elif opcode in _FREE_OPS:
+            pass
+        elif opcode == "copy":
+            cur.bytes += 2 * res_bytes  # read + write, no operand double-count
+        elif opcode in ("dynamic-slice", "slice", "gather"):
+            # reads only the sliced window, never the whole operand
+            cur.bytes += 2 * res_bytes
+            cur.resident_bytes -= min(cur.resident_bytes, resident_bytes)
+            cur.has_slicing = True
+        elif opcode in ("dynamic-update-slice", "scatter"):
+            # writes only the update window (aliased in place on TPU)
+            upd = operand_types[1] if len(operand_types) > 1 else res_type
+            cur.bytes += 2 * _shape_bytes(upd)
+            cur.resident_bytes -= min(cur.resident_bytes, resident_bytes)
+            cur.has_slicing = True
+        else:
+            cur.bytes += res_bytes + operand_bytes
+    _finalize_fusion_bytes(comps)
+    return comps, entry or "main"
+
+
+def _finalize_fusion_bytes(comps: dict[str, CompStats]) -> None:
+    """Charge fusion boundaries. A fusion whose computation slices (dynamic-
+    slice / DUS / gather / scatter) touches only its window: count
+    2 * min(result, smallest operand) — exact for scan xs-slicing and cache
+    updates, conservative for mixed fusions. Other fusions pay full
+    result + operands."""
+    for st in comps.values():
+        for called, res_b, min_op_b, full_b in st.fusion_ops:
+            sub = comps.get(called)
+            if sub is not None and sub.has_slicing:
+                st.bytes += 2 * min(res_b, min_op_b) if min_op_b else 2 * res_b
+            else:
+                st.bytes += full_b
+
+
+def _dot_flops(line: str, res_type: str, operand_types: list[str]) -> float:
+    res_dims = _shape_dims(res_type)
+    lhs = operand_types[0] if operand_types else ""
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    contracted = 1
+    if mc and lhs:
+        ldims = _shape_dims(lhs)
+        for d in mc.group(1).split(","):
+            if d:
+                contracted *= ldims[int(d)]
+    return 2.0 * math.prod(res_dims or [1]) * contracted
+
+
+def _conv_flops(line: str, res_type: str, operand_types: list[str]) -> float:
+    res_dims = _shape_dims(res_type)
+    rhs = operand_types[1] if len(operand_types) > 1 else ""
+    rd = _shape_dims(rhs)
+    # 2 * output elements * kernel volume * input channels (approx: prod(rhs)/out_ch)
+    k = math.prod(rd) / (rd[-1] if rd else 1) if rd else 1
+    return 2.0 * math.prod(res_dims or [1]) * k
+
+
+def aggregate(comps: dict[str, CompStats], entry: str) -> dict:
+    """Recursive trip-count-weighted totals from the entry computation."""
+    memo: dict[str, dict] = {}
+
+    def visit(name: str, stack=()) -> dict:
+        if name in memo:
+            return memo[name]
+        if name in stack or name not in comps:
+            return {"flops": 0.0, "bytes": 0.0, "coll": {}}
+        st = comps[name]
+        total = {"flops": st.flops, "bytes": st.bytes + st.resident_bytes,
+                 "coll": dict(st.coll_bytes)}
+        for body, trip in st.while_calls:
+            sub = visit(body, stack + (name,))
+            total["flops"] += trip * sub["flops"]
+            # big operands re-stream from HBM every iteration; small
+            # (<4 MiB) loop operands stay VMEM-resident -> counted once
+            total["bytes"] += trip * (sub["bytes"] - sub.get("res_once", 0.0)) + sub.get("res_once", 0.0)
+            for k, v in sub["coll"].items():
+                total["coll"][k] = total["coll"].get(k, 0.0) + trip * v
+        for branch in st.cond_calls:
+            sub = visit(branch, stack + (name,))
+            total["flops"] += sub["flops"]
+            total["bytes"] += sub["bytes"]
+            for k, v in sub["coll"].items():
+                total["coll"][k] = total["coll"].get(k, 0.0) + v
+        for fc in st.fusion_calls:
+            sub = visit(fc, stack + (name,))
+            total["flops"] += sub["flops"]   # bytes intentionally excluded
+        total["res_once"] = st.resident_bytes + sum(
+            visit(b, stack + (name,)).get("res_once", 0.0)
+            for b, _ in st.while_calls
+        ) + sum(visit(b, stack + (name,)).get("res_once", 0.0) for b in st.cond_calls)
+        memo[name] = total
+        return total
+
+    return visit(entry)
+
+
+def analyze(txt: str) -> dict:
+    comps, entry = parse_hlo(txt)
+    out = aggregate(comps, entry)
+    out["collective_bytes_total"] = sum(out["coll"].values())
+    return out
+
+
+# ---------------------------------------------------------------------------
+# roofline terms (per device); v5e constants from the assignment
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s / chip
+ICI_BW = 50e9             # bytes/s per link (~per chip, one direction)
+
+
+def roofline_terms(analysis: dict) -> dict:
+    compute = analysis["flops"] / PEAK_FLOPS
+    memory = analysis["bytes"] / HBM_BW
+    collective = analysis["collective_bytes_total"] / ICI_BW
+    dom = max(
+        ("compute", compute), ("memory", memory), ("collective", collective),
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": collective,
+        "dominant": dom,
+    }

@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+Single pod : (data=16, model=16)            — 256 chips (v5e pod)
+Multi-pod  : (pod=2, data=16, model=16)     — 512 chips
+
+Functions, not module constants, so importing never touches jax device
+state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """Axes that carry batch parallelism."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def make_host_mesh():
+    """1-device mesh for CPU smoke paths."""
+    return jax.make_mesh((1, 1), ("data", "model"))

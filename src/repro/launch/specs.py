@@ -1,0 +1,264 @@
+"""Input ShapeDtypeStructs + sharding rules for every (arch x shape).
+
+Baseline sharding scheme (DESIGN.md §5):
+  * batch            -> ("pod","data") axes
+  * Megatron axis    -> "model": attention heads / FFN width / vocab / experts
+  * FSDP axis        -> "data" on the other weight dim (optimizer state and
+    fp32 master params are fully sharded; XLA all-gathers weights per layer)
+  * activations      -> (batch -> data axes, d_model -> "model")
+  * KV caches        -> (batch -> data, head_dim -> "model")  [head counts are
+    not always divisible by 16; head_dim always is]
+
+``long_500k`` has global_batch=1 < 16, so its batch dims stay unsharded
+(the data axis idles; noted in the roofline).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.launch.mesh import data_axes
+from repro.models import model as M
+
+Params = Any
+
+# weight-name classes for the sharding rules
+_COL = {"wq", "wk", "wv", "w1", "w3", "w_up", "w_gate", "w_in", "w_dt", "w", "proj"}
+_ROW = {"wo", "w2", "w_down", "w_out"}
+_REPL = {"conv", "a_log", "d_skip", "b_dt", "b_if", "b", "r", "w_bc", "router"}
+
+
+# ===========================================================================
+# parameter shardings
+# ===========================================================================
+
+def param_pspec(path: tuple, leaf) -> P:
+    name = None
+    for p in reversed(path):
+        if hasattr(p, "key"):
+            name = p.key
+            break
+        if hasattr(p, "name"):
+            name = p.name
+            break
+    nd = len(leaf.shape)
+    lead = (None,) * (nd - 2)
+
+    if name == "embed":
+        return P("model", "data")
+    if name == "lm_head":
+        return P("data", "model")
+    if name == "front_proj":
+        return P(None, None)
+    if name in ("we1", "we3"):          # (L, E, D, F): experts on model, FSDP on D
+        return P(None, "model", "data", None)
+    if name == "we2":                    # (L, E, F, D)
+        return P(None, "model", None, "data")
+    if name in _REPL or nd < 2:
+        return P(*((None,) * nd))
+    if name in _COL:
+        return P(*lead, "data", "model")
+    if name in _ROW:
+        return P(*lead, "model", "data")
+    return P(*((None,) * nd))
+
+
+def _drop_indivisible(spec: P, shape: tuple, mesh) -> P:
+    """jit in_shardings require exact divisibility (unlike internal
+    constraints, which pad): drop mesh axes that don't divide the dim —
+    e.g. vocab 51865 / 32001 / 49155 fall back to unsharded vocab."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    fixed = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        n = 1
+        for a in axes:
+            n *= sizes[a]
+        fixed.append(ax if dim % n == 0 else None)
+    return P(*fixed)
+
+
+def _strip_fsdp(spec: P) -> P:
+    """Serving params: drop the 'data' (FSDP) axis so weight shards stay
+    resident — decode cannot afford per-token weight regathers."""
+    return P(*(None if ax == "data" else ax for ax in spec))
+
+
+def tree_pspecs(tree_shapes, mesh=None, preset: str = "baseline") -> Any:
+    specs = jax.tree_util.tree_map_with_path(param_pspec, tree_shapes)
+    if preset in ("serve_dp", "serve_seq"):
+        specs = jax.tree.map(_strip_fsdp, specs,
+                             is_leaf=lambda x: isinstance(x, P))
+    if mesh is None:
+        return specs
+    return jax.tree.map(
+        lambda s, l: _drop_indivisible(s, l.shape, mesh), specs, tree_shapes
+    )
+
+
+def opt_state_pspecs(opt_shapes, param_specs) -> Any:
+    """Adam-like state: m/v mirror params; scalars replicated."""
+    out = {}
+    for k, v in opt_shapes.items():
+        if k in ("m", "v", "mu"):
+            out[k] = param_specs
+        else:
+            out[k] = P()
+    return out
+
+
+# ===========================================================================
+# activation / batch shardings
+# ===========================================================================
+
+def batch_pspecs(cfg: ArchConfig, shape: InputShape, mesh) -> dict:
+    dp = data_axes(mesh)
+    bdim = dp if shape.global_batch >= 16 else None
+    specs = {
+        "tokens": P(bdim, None),
+        "labels": P(bdim, None),
+    }
+    if cfg.frontend != "none":
+        specs["frontend"] = P(bdim, None, None)
+    return specs
+
+
+def activation_pspecs(cfg: ArchConfig, shape: InputShape, mesh,
+                       preset: str = "baseline") -> dict:
+    dp = data_axes(mesh)
+    bdim = dp if shape.global_batch >= 16 else None
+    if preset in ("serve_dp", "serve_seq"):
+        return {
+            "act": P(bdim, None, None),
+            "z": P(bdim, None, None),
+            "heads": None,
+            "logits": P(bdim, "model") if cfg.vocab % 16 == 0 else P(bdim, None),
+            "dec_qkv_pre": P(bdim, None, "model", None),
+            "dec_qkv": P(bdim, None, None, None),
+        }
+    if preset == "megatron_sp":
+        # Megatron sequence parallelism: residual stream seq-sharded (norms
+        # and residual adds collective-free), block interior head/hidden
+        # tensor-parallel (weight grads stay shard-local, no dW psums).
+        # GSPMD inserts AG(x) at block entry and RS at block exit.
+        return {
+            "act": P(bdim, "model", None),
+            "z": P(bdim, "model", None),
+            "heads": P(bdim, None, "model", None),
+            "logits": P(bdim, None, "model"),
+        }
+    if preset == "seqpar":
+        # Sequence parallelism (beyond-paper perf preset, EXPERIMENTS.md
+        # §Perf): activations sharded over SEQUENCE on the model axis.
+        # SwiGLU/norms run fully seq-sharded with NO collectives; attention
+        # all-gathers only the GQA-small k/v instead of psumming full-d_model
+        # activations every layer.
+        return {
+            "act": P(bdim, "model", None),
+            "z": P(bdim, "model", None),
+            "heads": None,                      # grouped GQA attention, no repeat
+            "kv": P(bdim, "model", None, None), # k/v seq-sharded pre-gather
+            "logits": P(bdim, "model", None),   # vocab dim unsharded; seq sharded
+            "q_chunk": shape.seq_len,           # no inner q scan: chunk reshape
+                                                # fights the seq sharding
+        }
+    return {
+        "act": P(bdim, None, "model"),
+        # the DTFL hand-off (the tensor the paper prices as D_size): batch
+        # stays data-parallel, d_model sharded over "model" for memory
+        "z": P(bdim, None, "model"),
+        # attention q/k/v (B, S, H, hd): heads on "model" (GSPMD pads
+        # non-divisible head counts)
+        "heads": P(bdim, None, "model", None),
+        # logits (B, S, V): vocab on "model" (internal constraint pads)
+        "logits": P(bdim, None, "model"),
+    }
+
+
+def cache_pspec(path: tuple, leaf, *, bdim) -> P:
+    names = [p.key for p in path if hasattr(p, "key")]
+    name = names[-1] if names else ""
+    nd = len(leaf.shape)
+    if name == "pos":
+        return P()
+    if "mamba" in names and name == "h":      # (L, B, di, N)
+        return P(None, bdim, "model", None)
+    if nd == 5:                                # (L, B, W, KV, hd)
+        return P(None, bdim, None, None, "model")
+    if nd == 4:                                # states (L, B, H, dh) / conv hist
+        return P(None, bdim, None, "model")
+    if nd == 3:
+        return P(None, bdim, None)
+    return P(*((None,) * nd))
+
+
+def cache_pspecs(cache_shapes, shape: InputShape, mesh, preset: str = "baseline") -> Any:
+    dp = data_axes(mesh)
+    bdim = dp if shape.global_batch >= 16 else None
+    if preset in ("serve_dp", "serve_seq"):
+        # Serving presets (EXPERIMENTS.md §Perf):
+        #   serve_dp : cache sharded on BATCH only (replicated over model) —
+        #              attention fully local per batch shard.
+        #   serve_seq: additionally shards the cache WINDOW over the model
+        #              axis (flash-decoding): each device attends its slice
+        #              of history; the softmax over the sharded window costs
+        #              only (B, H)-sized stat psums. 16x less cache/device.
+        def spec(path, leaf):
+            names = [q.key for q in path if hasattr(q, "key")]
+            name = names[-1] if names else ""
+            nd = len(leaf.shape)
+            if name == "pos":
+                return P()
+            if preset == "serve_seq" and nd == 5 and name in ("k", "v", "xk", "xv"):
+                return P(None, bdim, "model", None, None)
+            return P(None, bdim, *([None] * (nd - 2)))
+
+        return jax.tree_util.tree_map_with_path(spec, cache_shapes)
+    return jax.tree_util.tree_map_with_path(
+        functools.partial(cache_pspec, bdim=bdim), cache_shapes
+    )
+
+
+# ===========================================================================
+# input ShapeDtypeStructs
+# ===========================================================================
+
+def frontend_spec(cfg: ArchConfig, batch: int):
+    d = cfg.d_frontend or cfg.d_model
+    return jax.ShapeDtypeStruct((batch, cfg.n_frontend_tokens, d), jnp.bfloat16)
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    """Abstract stand-ins for every model input (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+        if cfg.frontend != "none":
+            specs["frontend"] = frontend_spec(cfg, B)
+        return specs
+    # decode: one token + a seq_len cache
+    token = jax.ShapeDtypeStruct((B,), jnp.int32)
+    long = shape.seq_len > 100_000
+    cache = jax.eval_shape(
+        lambda: M.init_cache(cfg, B, S, long_context=long)
+    )
+    return {"token": token, "cache": cache}
+
+
+def sharded(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,185 @@
+"""Step builders for the dry-run / launcher: DTFL train, full train, prefill,
+decode — each returns (fn, abstract_args, in_shardings, out_shardings,
+donate) ready for jax.jit().lower().
+
+The train step for the dry-run is the paper's technique: a DTFL tier step
+(client local-loss update || server update) at a configurable tier
+(default: mid tier), with Adam. ``--step full`` lowers the monolithic
+baseline step instead.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import optim
+from repro.configs.base import ArchConfig, InputShape
+from repro.core import local_loss, tiering
+from repro.launch import specs as S
+from repro.models import model as M
+
+DEFAULT_TIER = 4  # paper's M=7; mid tier (1-based)
+
+
+def _abstract(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def _param_like_specs(shapes_tree, mesh=None, preset="baseline"):
+    return S.tree_pspecs(shapes_tree, mesh, preset)
+
+
+# ===========================================================================
+# DTFL tier train step
+# ===========================================================================
+
+def build_dtfl_train(cfg: ArchConfig, shape: InputShape, mesh, *, tier: int = DEFAULT_TIER, preset: str = "baseline"):
+    cfg = cfg.replace(tie_embeddings=False)
+    opt = optim.adam(1e-3)
+    key = jax.random.PRNGKey(0)
+
+    params_shape = _abstract(lambda: M.init(key, cfg))
+    state_shape = _abstract(
+        lambda: local_loss.init_tier_state(key, cfg, M.init(key, cfg), tier, opt)
+    )
+
+    step = local_loss.make_dtfl_train_step(cfg, opt)
+    batch = S.input_specs(cfg, shape)
+
+    cps = _param_like_specs(state_shape.client_params, mesh)
+    aps = _param_like_specs(state_shape.aux_params, mesh)
+    sps = _param_like_specs(state_shape.server_params, mesh)
+    state_specs = local_loss.DTFLState(
+        client_params=cps,
+        aux_params=aps,
+        server_params=sps,
+        client_opt=S.opt_state_pspecs(state_shape.client_opt, cps),
+        aux_opt=S.opt_state_pspecs(state_shape.aux_opt, aps),
+        server_opt=S.opt_state_pspecs(state_shape.server_opt, sps),
+    )
+    batch_specs = S.batch_pspecs(cfg, shape, mesh)
+    metric_specs = local_loss.DTFLMetrics(P(), P())
+
+    return dict(
+        fn=step,
+        args=(state_shape, batch),
+        in_specs=(state_specs, batch_specs),
+        out_specs=(state_specs, metric_specs),
+        donate=(0,),
+        act_specs=S.activation_pspecs(cfg, shape, mesh, preset),
+        cfg=cfg,
+        n_layers=cfg.n_layers,
+    )
+
+
+# ===========================================================================
+# monolithic train step (baseline / FedAvg-style)
+# ===========================================================================
+
+def build_full_train(cfg: ArchConfig, shape: InputShape, mesh):
+    opt = optim.adam(1e-3)
+    key = jax.random.PRNGKey(0)
+    params_shape = _abstract(lambda: M.init(key, cfg))
+    opt_shape = _abstract(lambda: opt.init(M.init(key, cfg)))
+    step = local_loss.make_full_train_step(cfg, opt)
+    batch = S.input_specs(cfg, shape)
+
+    p_specs = _param_like_specs(params_shape, mesh)
+    o_specs = S.opt_state_pspecs(opt_shape, p_specs)
+    return dict(
+        fn=step,
+        args=(params_shape, opt_shape, batch),
+        in_specs=(p_specs, o_specs, S.batch_pspecs(cfg, shape, mesh)),
+        out_specs=(p_specs, o_specs, P()),
+        donate=(0, 1),
+        act_specs=S.activation_pspecs(cfg, shape, mesh),
+        cfg=cfg,
+        n_layers=cfg.n_layers,
+    )
+
+
+# ===========================================================================
+# serve: prefill (full forward) and decode (one token + cache)
+# ===========================================================================
+
+def _bf16_params_shape(cfg):
+    key = jax.random.PRNGKey(0)
+    shapes = _abstract(lambda: M.init(key, cfg))
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype
+        ),
+        shapes,
+    )
+
+
+def build_prefill(cfg: ArchConfig, shape: InputShape, mesh):
+    params_shape = _bf16_params_shape(cfg)
+
+    def prefill(params, batch):
+        logits, _ = M.forward(params, cfg, batch)
+        return logits[:, -1]  # next-token logits
+
+    batch = S.input_specs(cfg, shape)
+    batch.pop("labels", None)
+    bspecs = S.batch_pspecs(cfg, shape, mesh)
+    bspecs.pop("labels", None)
+    dp = S.data_axes(mesh) if shape.global_batch >= 16 else None
+    out_spec = S._drop_indivisible(
+        P(dp, "model"), (shape.global_batch, cfg.vocab), mesh
+    )
+    return dict(
+        fn=prefill,
+        args=(params_shape, batch),
+        in_specs=(_param_like_specs(params_shape, mesh), bspecs),
+        out_specs=out_spec,
+        donate=(),
+        act_specs=S.activation_pspecs(cfg, shape, mesh),
+        cfg=cfg,
+        n_layers=cfg.n_layers,
+    )
+
+
+def build_decode(cfg: ArchConfig, shape: InputShape, mesh, *, preset: str = "baseline"):
+    params_shape = _bf16_params_shape(cfg)
+    ins = S.input_specs(cfg, shape)
+    cache_shape = ins["cache"]
+
+    def serve_step(params, token, cache):
+        return M.decode_step(params, cfg, token, cache)
+
+    p_specs = _param_like_specs(params_shape, mesh, preset)
+    c_specs = S.cache_pspecs(cache_shape, shape, mesh, preset)
+    dp = S.data_axes(mesh) if shape.global_batch >= 16 else None
+    tok_spec = P(dp)
+    logits_spec = S._drop_indivisible(
+        P(dp, "model"), (shape.global_batch, cfg.vocab), mesh
+    )
+    return dict(
+        fn=serve_step,
+        args=(params_shape, ins["token"], cache_shape),
+        in_specs=(p_specs, tok_spec, c_specs),
+        out_specs=(logits_spec, {"layers": c_specs["layers"], "pos": P()}),
+        donate=(2,),
+        act_specs=S.activation_pspecs(cfg, shape, mesh, preset),
+        cfg=cfg,
+        n_layers=cfg.n_layers,
+    )
+
+
+BUILDERS = {
+    "train": build_dtfl_train,
+    "full": build_full_train,
+    "prefill": build_prefill,
+    "decode": build_decode,
+}
+
+
+def builder_for(shape: InputShape, step: str | None = None):
+    if step:
+        return BUILDERS[step]
+    return BUILDERS[{"train": "train", "prefill": "prefill", "decode": "decode"}[shape.kind]]

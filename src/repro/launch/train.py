@@ -1,0 +1,124 @@
+"""Training entry point: DTFL federated training on any selectable arch.
+
+CPU-runnable driver (reduced configs by default); on a real TPU deployment
+the same flags select full configs and the production mesh. Examples:
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --rounds 20
+  PYTHONPATH=src python -m repro.launch.train --arch resnet-56 --clients 10 \
+      --rounds 50 --target-acc 0.8 --scheduler dynamic
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro import optim
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.configs.resnet_cifar import get_resnet
+from repro.data.partition import dirichlet_partition, iid_partition
+from repro.data.pipeline import ClientDataset, make_eval_batch
+from repro.data.synthetic import DATASETS, ClassImageTask, SeqTask
+from repro.fed import (DTFLTrainer, HeteroEnv, ResNetAdapter, SimClient,
+                       TransformerAdapter, TRAINERS)
+
+
+def build_image_setup(cfg, args):
+    base = DATASETS[args.dataset]
+    task = ClassImageTask(n_classes=base.n_classes, image_size=cfg.image_size,
+                          noise=base.noise, seed=base.seed)
+    rng = np.random.default_rng(args.seed)
+    labels = rng.integers(0, task.n_classes, args.samples)
+    part_fn = iid_partition if args.iid else dirichlet_partition
+    parts = part_fn(labels, args.clients, seed=args.seed)
+    clients = [
+        SimClient(i, ClientDataset(task, labels, parts[i], args.batch_size), None)
+        for i in range(args.clients)
+    ]
+    return clients, make_eval_batch(task, 512)
+
+
+class SeqClientDataset:
+    """Token-LM per-client dataset with the ClientDataset interface."""
+
+    def __init__(self, task: SeqTask, n_batches: int, batch_size: int, seq: int, seed: int):
+        self.task, self._n, self.batch_size, self.seq, self.seed = task, n_batches, batch_size, seq, seed
+
+    def __len__(self):
+        return self._n * self.batch_size
+
+    @property
+    def n_batches(self):
+        return self._n
+
+    def epoch(self, epoch_seed: int):
+        yield from self.task.batches(self.batch_size, self.seq, self._n,
+                                     seed=self.seed * 7919 + epoch_seed)
+
+
+def build_lm_setup(cfg, args):
+    task = SeqTask(vocab=cfg.vocab)
+    clients = [
+        SimClient(i, SeqClientDataset(task, 2, args.batch_size, args.seq_len, i), None)
+        for i in range(args.clients)
+    ]
+    ev = next(task.batches(args.batch_size, args.seq_len, 1, seed=99))
+    return clients, ev
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="resnet-56",
+                    choices=ASSIGNED_ARCHS + ["resnet-56", "resnet-110"])
+    ap.add_argument("--method", default="dtfl", choices=list(TRAINERS))
+    ap.add_argument("--clients", type=int, default=10)
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--batch-size", type=int, default=32)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--samples", type=int, default=2000)
+    ap.add_argument("--dataset", default="cifar10", choices=list(DATASETS))
+    ap.add_argument("--iid", action="store_true")
+    ap.add_argument("--full-size", action="store_true",
+                    help="full config (TPU scale) instead of the reduced variant")
+    ap.add_argument("--scheduler", default="dynamic")
+    ap.add_argument("--target-acc", type=float, default=None)
+    ap.add_argument("--participation", type=float, default=1.0)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--dcor-alpha", type=float, default=0.0)
+    ap.add_argument("--switch-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    if args.arch.startswith("resnet"):
+        full_cfg = get_resnet(args.arch)
+        cfg = full_cfg if args.full_size else full_cfg.reduced()
+        adapter = ResNetAdapter(cfg, cost_cfg=full_cfg, dcor_alpha=args.dcor_alpha)
+        clients, eval_batch = build_image_setup(cfg, args)
+    else:
+        full_cfg = get_config(args.arch)
+        cfg = full_cfg if args.full_size else full_cfg.reduced()
+        adapter = TransformerAdapter(cfg, seq_len=args.seq_len, cost_cfg=full_cfg,
+                                     dcor_alpha=args.dcor_alpha)
+        clients, eval_batch = build_lm_setup(cfg, args)
+
+    env = HeteroEnv(args.clients, switch_every=args.switch_every, seed=args.seed)
+    trainer_cls = TRAINERS[args.method]
+    kw = {"scheduler": args.scheduler} if args.method == "dtfl" else {}
+    trainer = trainer_cls(adapter, clients, env, optim.adam(args.lr), seed=args.seed, **kw)
+
+    t0 = time.time()
+    logs = trainer.run(args.rounds, eval_batch, target_acc=args.target_acc,
+                       participation=args.participation, verbose=True)
+    wall = time.time() - t0
+    print(f"[train] {args.method} {args.arch}: {len(logs)} rounds, "
+          f"sim_clock={logs[-1].clock:,.0f}s acc={logs[-1].acc:.3f} wall={wall:.0f}s")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump([l.__dict__ for l in logs], f, default=str, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,315 @@
+"""Core NN layers: norms, RoPE, GQA attention (train/prefill/decode), MLP.
+
+All functions are pure; parameters are plain dict pytrees. Stacked-layer
+parameters carry a leading layer axis and are consumed through ``lax.scan``
+in transformer.py. Compute dtype policy: params fp32, matmuls in
+``cfg.dtype`` (bf16 by default), softmax / normalization statistics in fp32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict
+_NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def cdtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, *, scale: float | None = None) -> jax.Array:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+
+
+def embed_init(key, vocab: int, d: int) -> jax.Array:
+    return jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * gamma).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: (S,) or (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., :, None, :]                         # broadcast over heads
+    sin = sin[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention params
+# ---------------------------------------------------------------------------
+
+def attn_param_init(key, cfg) -> Params:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, h * hd),
+        "wk": dense_init(ks[1], d, kv * hd),
+        "wv": dense_init(ks[2], d, kv * hd),
+        "wo": dense_init(ks[3], h * hd, d, scale=1.0 / math.sqrt(h * hd)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# attention math. GQA kv heads are materialized to H heads ("repeat") and the
+# head axis is sharded over the model mesh axis (shardctx "heads"); explicit
+# repeat keeps every tensor head-sharded with at most the GSPMD padding waste
+# of non-divisible head counts. The no-repeat grouped variant is a perf lever.
+# ---------------------------------------------------------------------------
+
+def _repeat_kv(k: jax.Array, H: int) -> jax.Array:
+    KV = k.shape[2]
+    if KV == H:
+        return k
+    return jnp.repeat(k, H // KV, axis=2)
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    window: int = 0,
+    q_offset: int | jax.Array = 0,
+    q_chunk: int = 1024,
+) -> jax.Array:
+    """Dense softmax attention, causal and sliding-window masking.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd). Returns (B, Sq, H, hd).
+    Processes queries in chunks of ``q_chunk`` through ``lax.scan`` (exact —
+    softmax rows are complete per chunk) so the score tensor never exceeds
+    O(q_chunk * Sk) per head: the jnp analogue of the flash-attention
+    blocking used by the Pallas kernel (kernels/flash_attention.py).
+    """
+    from repro.models.shardctx import constrain, get_setting
+
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    scale = 1.0 / math.sqrt(hd)
+    # Two layouts (EXPERIMENTS.md §Perf): with a head-sharding context
+    # ("heads" spec set) kv heads are repeated to H and the head axis is
+    # tensor-parallel; without it (CPU / seqpar preset) attention stays in
+    # grouped GQA form — no repeat, k/v move at KV-head size.
+    head_sharded = get_setting("heads") is not None
+    if head_sharded:
+        q = constrain(q, "heads")
+        k = constrain(_repeat_kv(k, H), "heads")
+        v = constrain(_repeat_kv(v, H), "heads")
+        G = 1
+        qg = q.reshape(B, Sq, k.shape[2], 1, hd)
+    else:
+        k = constrain(k, "kv")
+        v = constrain(v, "kv")
+        G = H // KV
+        qg = q.reshape(B, Sq, KV, G, hd)
+    kpos = jnp.arange(k.shape[1])
+
+    def chunk_attn(q_chunk_arr, qpos):
+        # q_chunk_arr: (B, C, KV, G, hd); qpos: (C,)
+        s = jnp.einsum(
+            "bqkgd,bskd->bkgqs", q_chunk_arr, k, preferred_element_type=jnp.float32
+        ) * scale
+        mask = jnp.ones((qpos.shape[0], k.shape[1]), bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window:
+            mask &= qpos[:, None] - kpos[None, :] < window
+        s = jnp.where(mask[None, None, None], s, _NEG_INF)
+        p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        return jnp.einsum("bkgqs,bskd->bqkgd", p, v)
+
+    qc_override = get_setting("q_chunk")
+    if qc_override is not None:
+        q_chunk = int(qc_override)
+    if Sq % q_chunk:
+        # non-multiple sequence (e.g. whisper's 1500 frames): largest divisor
+        qc = q_chunk
+        while Sq % qc:
+            qc -= 1
+        q_chunk = Sq if qc < 64 else qc
+    if Sq <= q_chunk:
+        qpos = q_offset + jnp.arange(Sq)
+        out = chunk_attn(qg, qpos)
+    else:
+        n = Sq // q_chunk
+        qs = qg.reshape(B, n, q_chunk, *qg.shape[2:]).transpose(1, 0, 2, 3, 4, 5)
+        pos = (q_offset + jnp.arange(Sq)).reshape(n, q_chunk)
+
+        def body(_, xs):
+            qc, pc = xs
+            return None, chunk_attn(qc, pc)
+
+        _, outs = jax.lax.scan(body, None, (qs, pos))
+        out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, *qg.shape[2:])
+    return out.reshape(B, Sq, H, hd)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    pos: jax.Array,
+    *,
+    ring: bool,
+) -> jax.Array:
+    """Single-token attention against a (ring-buffer) KV cache.
+
+    q: (B, 1, H, hd); caches: (B, W, KV, hd); pos: scalar int32 — the absolute
+    position of the *current* token (already written into the cache).
+    When ``ring`` is True the cache is a ring buffer holding the last W
+    positions; otherwise slot i holds absolute position i.
+    """
+    B, _, H, hd = q.shape
+    W, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, 1, KV, G, hd)
+    s = jnp.einsum(
+        "bqkgd,bskd->bkgqs", qg, k_cache, preferred_element_type=jnp.float32
+    ) * scale                                         # (B,KV,G,1,W)
+    slots = jnp.arange(W)
+    if ring:
+        valid = slots <= jnp.minimum(pos, W - 1)      # before wrap only pos+1 slots live
+    else:
+        valid = slots <= pos
+    s = jnp.where(valid[None, None, None, None, :], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v_cache)  # (B,1,KV,G,hd)
+    return out.reshape(B, 1, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# attention blocks (projection + rope + attention), train and decode paths
+# ---------------------------------------------------------------------------
+
+def attn_apply(
+    x: jax.Array,
+    p: Params,
+    cfg,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    kv_source: jax.Array | None = None,
+    use_rope: bool = True,
+) -> jax.Array:
+    """Full-sequence attention. kv_source != None -> cross attention."""
+    B, S, D = x.shape
+    hd = cfg.resolved_head_dim
+    dt = cdtype(cfg)
+    xv = x.astype(dt)
+    src = (kv_source if kv_source is not None else x).astype(dt)
+    q = (xv @ p["wq"].astype(dt)).reshape(B, S, cfg.n_heads, hd)
+    k = (src @ p["wk"].astype(dt)).reshape(B, src.shape[1], cfg.n_kv_heads, hd)
+    v = (src @ p["wv"].astype(dt)).reshape(B, src.shape[1], cfg.n_kv_heads, hd)
+    if use_rope and kv_source is None:
+        pos = jnp.arange(S)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    w = cfg.window if window is None else window
+    out = attention(q, k, v, causal=causal and kv_source is None, window=w or 0)
+    return (out.reshape(B, S, -1) @ p["wo"].astype(dt)).astype(x.dtype)
+
+
+def attn_decode_apply(
+    x: jax.Array,
+    p: Params,
+    cfg,
+    cache: Params,
+    pos: jax.Array,
+    *,
+    ring: bool,
+) -> tuple[jax.Array, Params]:
+    """One-token attention; writes k/v into cache slot pos (ring: pos % W)."""
+    from repro.models.shardctx import constrain
+
+    B, S1, D = x.shape
+    assert S1 == 1
+    hd = cfg.resolved_head_dim
+    dt = cdtype(cfg)
+    xv = x.astype(dt)
+    # Serve presets: "dec_qkv_pre" keeps the projection output sharded like
+    # the (model-sharded) weights, then "dec_qkv" reshards the tiny one-token
+    # q/k/v (an all-gather of KBs). Without the double constraint GSPMD
+    # propagates the replicated layout back into per-layer WEIGHT gathers.
+    def _proj(w):
+        y = (xv @ w.astype(dt)).reshape(B, 1, -1, hd)
+        return constrain(constrain(y, "dec_qkv_pre"), "dec_qkv")
+
+    q = _proj(p["wq"])
+    k = _proj(p["wk"])
+    v = _proj(p["wv"])
+    posv = pos[None] if pos.ndim == 0 else pos
+    q = apply_rope(q, posv.astype(jnp.float32), cfg.rope_theta)
+    k = apply_rope(k, posv.astype(jnp.float32), cfg.rope_theta)
+    W = cache["k"].shape[1]
+    slot = (pos % W) if ring else pos
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    out = decode_attention(q, k_cache, v_cache, pos, ring=ring)
+    y = (out.reshape(B, 1, -1) @ p["wo"].astype(dt)).astype(x.dtype)
+    return y, {"k": k_cache, "v": v_cache}
+
+
+def cross_attn_decode_apply(x, p, cfg, xk, xv_):
+    """Cross-attention for decode: keys/values precomputed from encoder output.
+
+    xk, xv_: (B, P, KV, hd)."""
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    dt = cdtype(cfg)
+    q = (x.astype(dt) @ p["wq"].astype(dt)).reshape(B, 1, cfg.n_heads, hd)
+    out = decode_attention(q, xk.astype(dt), xv_.astype(dt),
+                           jnp.asarray(xk.shape[1] - 1), ring=False)
+    return (out.reshape(B, 1, -1) @ p["wo"].astype(dt)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_param_init(key, d: int, f: int) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "w1": dense_init(ks[0], d, f),
+        "w3": dense_init(ks[1], d, f),
+        "w2": dense_init(ks[2], f, d),
+    }
+
+
+def mlp_apply(x: jax.Array, p: Params, cfg) -> jax.Array:
+    dt = cdtype(cfg)
+    h = x.astype(dt)
+    up = jax.nn.silu(h @ p["w1"].astype(dt)) * (h @ p["w3"].astype(dt))
+    return (up @ p["w2"].astype(dt)).astype(x.dtype)

@@ -1,0 +1,227 @@
+"""Public model API: init / forward / decode, uniform across families.
+
+The parameter tree keeps all transformer blocks stacked on a leading layer
+axis so DTFL tiers can split it by slicing (core/tiering.py):
+
+    params = {
+      'embed':      (V, D),
+      'blocks':     {... leading axis L ...},
+      'final_ln':   (D,),
+      'lm_head':    (D, V)            # absent when cfg.tie_embeddings
+      'front_proj': (d_front, D)      # vlm / audio stub projector
+      'enc_blocks': {... axis L_enc}  # encdec
+      'enc_ln':     (D,),             # encdec
+    }
+
+Batch dict:
+    tokens:   (B, S) int32
+    frontend: (B, P, d_front) float   # vlm / audio archs only
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models.layers import Params, cdtype, dense_init, embed_init, rmsnorm
+from repro.models import ssm as ssm_lib
+from repro.models.shardctx import constrain
+
+
+# ===========================================================================
+# init
+# ===========================================================================
+
+def init(key, cfg) -> Params:
+    kind = tfm.block_kind(cfg)
+    ks = jax.random.split(key, 6)
+    params: Params = {
+        "embed": embed_init(ks[0], cfg.padded_vocab, cfg.d_model),
+        "blocks": tfm.stack_init(ks[1], cfg, kind, cfg.n_layers),
+        "final_ln": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[2], cfg.d_model, cfg.padded_vocab, scale=0.02)
+    if cfg.frontend != "none":
+        d_front = cfg.d_frontend or cfg.d_model
+        params["front_proj"] = dense_init(ks[3], d_front, cfg.d_model)
+    if cfg.family == "encdec":
+        params["enc_blocks"] = tfm.stack_init(ks[4], cfg, "enc", cfg.n_enc_layers)
+        params["enc_ln"] = jnp.ones((cfg.d_model,), jnp.float32)
+    return params
+
+
+# ===========================================================================
+# embedding / head
+# ===========================================================================
+
+def embed_tokens(params: Params, cfg, batch: dict) -> jax.Array:
+    x = params["embed"][batch["tokens"]]                       # (B,S,D) fp32
+    if cfg.family == "vlm":
+        pe = batch["frontend"].astype(jnp.float32) @ params["front_proj"]
+        P = pe.shape[1]
+        x = jax.lax.dynamic_update_slice(x, pe.astype(x.dtype), (0, 0, 0))
+    return constrain(x.astype(cdtype(cfg)), "act")
+
+
+def encode(params: Params, cfg, batch: dict) -> jax.Array:
+    """Whisper encoder over stubbed audio-frame embeddings."""
+    xin = batch["frontend"].astype(jnp.float32) @ params["front_proj"]
+    xin = xin.astype(cdtype(cfg))
+    enc, _ = tfm.stack_apply(xin, params["enc_blocks"], cfg, "enc")
+    return rmsnorm(enc, params["enc_ln"], cfg.norm_eps)
+
+
+def lm_logits(params: Params, cfg, x: jax.Array) -> jax.Array:
+    dt = cdtype(cfg)
+    x = rmsnorm(x, params["final_ln"], cfg.norm_eps).astype(dt)
+    # tied configs fall back to embed^T; DTFL split training unties (the two
+    # halves live on different hosts), so a split server tree has lm_head.
+    w = params["lm_head"] if "lm_head" in params else params["embed"].T
+    logits = x @ w.astype(dt)
+    if cfg.padded_vocab != cfg.vocab:
+        # mask the padded vocab rows out of the softmax
+        mask = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab, 0.0, -1e9)
+        logits = logits + mask.astype(logits.dtype)
+    # internal constraint (padding allowed) keeps non-divisible vocabs sharded
+    return constrain(logits, "logits")
+
+
+# ===========================================================================
+# full forward (training / prefill compute)
+# ===========================================================================
+
+def forward(params: Params, cfg, batch: dict) -> tuple[jax.Array, jax.Array]:
+    """Returns (logits (B,S,V) compute-dtype, moe_aux_loss)."""
+    kind = tfm.block_kind(cfg)
+    enc_out = encode(params, cfg, batch) if cfg.family == "encdec" else None
+    x = embed_tokens(params, cfg, batch)
+    x, aux = tfm.stack_apply(x, params["blocks"], cfg, kind, enc_out=enc_out)
+    return lm_logits(params, cfg, constrain(x, "act")), aux
+
+
+# ===========================================================================
+# DTFL split application (client-side / server-side halves)
+# ===========================================================================
+
+def client_forward(client_params: Params, cfg, batch: dict) -> tuple[jax.Array, jax.Array]:
+    """Embed + first-s blocks. Returns (z, moe_aux). ``client_params`` comes
+    from core.tiering.split_params — its 'blocks' are the first s layers."""
+    kind = tfm.block_kind(cfg)
+    enc_out = encode(client_params, cfg, batch) if cfg.family == "encdec" else None
+    x = embed_tokens(client_params, cfg, batch)
+    x, aux = tfm.stack_apply(x, client_params["blocks"], cfg, kind, enc_out=enc_out)
+    x = constrain(x, "z")  # the DTFL client->server hand-off boundary
+    if enc_out is not None:
+        return (x, enc_out), aux
+    return x, aux
+
+
+def server_forward(server_params: Params, cfg, z) -> tuple[jax.Array, jax.Array]:
+    """Remaining blocks + head on the received activations."""
+    kind = tfm.block_kind(cfg)
+    enc_out = None
+    if cfg.family == "encdec":
+        z, enc_out = z
+    z = constrain(z, "z")
+    x, aux = tfm.stack_apply(z, server_params["blocks"], cfg, kind, enc_out=enc_out)
+    return lm_logits(server_params, cfg, x), aux
+
+
+def aux_head_init(key, cfg) -> Params:
+    """DTFL auxiliary network: norm + linear local head (transformer port of
+    the paper's avgpool+fc)."""
+    return {
+        "ln": jnp.ones((cfg.d_model,), jnp.float32),
+        "proj": dense_init(key, cfg.d_model, cfg.padded_vocab, scale=0.02),
+    }
+
+
+def aux_head_apply(aux_params: Params, cfg, z) -> jax.Array:
+    if cfg.family == "encdec":
+        z, _ = z
+    dt = cdtype(cfg)
+    h = rmsnorm(z, aux_params["ln"], cfg.norm_eps).astype(dt)
+    logits = h @ aux_params["proj"].astype(dt)
+    if cfg.padded_vocab != cfg.vocab:
+        mask = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab, 0.0, -1e9)
+        logits = logits + mask.astype(logits.dtype)
+    return constrain(logits, "logits")
+
+
+# ===========================================================================
+# decode (serving)
+# ===========================================================================
+
+def cache_len_for(cfg, seq_len: int, *, long_context: bool) -> int:
+    if long_context and cfg.serve_window:
+        return min(seq_len, cfg.serve_window)
+    if cfg.window:
+        return min(seq_len, cfg.window)
+    return seq_len
+
+
+def init_cache(cfg, batch_size: int, seq_len: int, *, long_context: bool = False) -> Params:
+    kind = tfm.block_kind(cfg)
+    W = cache_len_for(cfg, seq_len, long_context=long_context)
+    tmpl = tfm.block_cache_init(cfg, kind, batch_size, W)
+    layers = jax.tree.map(lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), tmpl)
+    return {"layers": layers, "pos": jnp.zeros((), jnp.int32)}
+
+
+def decode_step(params: Params, cfg, token: jax.Array, cache: Params) -> tuple[jax.Array, Params]:
+    """token: (B,) int32 — the token at position cache['pos'].
+
+    Returns (logits (B, V), updated cache with pos+1)."""
+    kind = tfm.block_kind(cfg)
+    pos = cache["pos"]
+    x = params["embed"][token][:, None, :].astype(cdtype(cfg))  # (B,1,D)
+    W = _attn_cache_len(cache)
+    x, new_layers, _ = tfm.stack_decode(
+        x, params["blocks"], cache["layers"], cfg, kind, pos, ring=_is_ring(cfg, W)
+    )
+    logits = lm_logits(params, cfg, x)[:, 0]
+    return logits, {"layers": new_layers, "pos": pos + 1}
+
+
+def _attn_cache_len(cache: Params) -> int | None:
+    layers = cache["layers"]
+    if isinstance(layers, dict) and "k" in layers:
+        return layers["k"].shape[2]
+    return None
+
+
+def _is_ring(cfg, cache_len: int | None) -> bool:
+    if cache_len is None:
+        return False
+    w = cfg.window or cfg.serve_window
+    return bool(w) and cache_len <= w
+
+
+# ===========================================================================
+# analytic parameter counts
+# ===========================================================================
+
+def _tree_size(tree) -> int:
+    return sum(int(math.prod(l.shape)) for l in jax.tree.leaves(tree))
+
+
+def count_params_analytic(cfg, active_only: bool = False) -> int:
+    shapes = jax.eval_shape(lambda k: init(k, cfg), jax.random.PRNGKey(0))
+    total = _tree_size(shapes)
+    if not active_only:
+        return total
+    if cfg.family == "moe":
+        per_expert = 3 * cfg.d_model * cfg.d_ff
+        total -= (cfg.n_experts - cfg.top_k) * cfg.n_layers * per_expert
+    if cfg.family == "ssm" and cfg.slstm_every:
+        n_sl = sum(
+            1 for i in range(cfg.n_layers) if i % cfg.slstm_every == cfg.slstm_every - 1
+        )
+        mk = jax.eval_shape(lambda k: tfm.block_init(k, cfg, "ssm"), jax.random.PRNGKey(0))
+        m_sz, s_sz = _tree_size(mk["mlstm"]), _tree_size(mk["slstm"])
+        total -= n_sl * m_sz + (cfg.n_layers - n_sl) * s_sz
+    return total

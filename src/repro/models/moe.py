@@ -1,0 +1,165 @@
+"""Mixture-of-Experts FFN: GShard-style grouped capacity-based top-k dispatch.
+
+Experts are sharded over the ``model`` mesh axis (expert parallelism); under
+pjit the dispatch/combine einsums lower to all-to-alls. Shared experts
+(DeepSeekMoE / llama4-scout) run densely alongside the routed path.
+
+Tokens are processed in *groups* (GShard's trick): capacity is per-group, so
+the dispatch tensor is (G, Tg, E, C) with Tg*E*C bounded by the group size —
+O(Tg^2 * k * cf) per group instead of O(T^2 * k * cf) globally. Tokens over
+capacity are dropped (combine weight zero), keeping all shapes static.
+
+The one-hot dispatch einsum is the TPU-native (MXU-friendly) baseline; a
+sort/gather-based dispatch is the documented hillclimb alternative.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, cdtype, dense_init, mlp_apply, mlp_param_init
+
+GROUP_SIZE = 512  # tokens per dispatch group (perf/memory knob)
+
+
+def moe_param_init(key, cfg) -> Params:
+    d, fe = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 5)
+    p: Params = {
+        "router": dense_init(ks[0], d, cfg.n_experts, scale=0.02),
+        "we1": jax.random.normal(ks[1], (cfg.n_experts, d, fe), jnp.float32) / math.sqrt(d),
+        "we3": jax.random.normal(ks[2], (cfg.n_experts, d, fe), jnp.float32) / math.sqrt(d),
+        "we2": jax.random.normal(ks[3], (cfg.n_experts, fe, d), jnp.float32) / math.sqrt(fe),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_param_init(ks[4], d, cfg.d_ff_shared_resolved)
+    return p
+
+
+def group_shape(n_tokens: int) -> tuple[int, int]:
+    tg = min(GROUP_SIZE, n_tokens)
+    while n_tokens % tg:
+        tg -= 1
+    return n_tokens // tg, tg
+
+
+def capacity(tokens_per_group: int, cfg) -> int:
+    cap = int(math.ceil(tokens_per_group * cfg.top_k / cfg.n_experts * cfg.capacity_factor))
+    return max(cap, cfg.top_k)
+
+
+def moe_apply(x: jax.Array, p: Params, cfg) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out, load_balance_aux_loss)."""
+    B, S, D = x.shape
+    T = B * S
+    E, K = cfg.n_experts, cfg.top_k
+    G, Tg = group_shape(T)
+    C = capacity(Tg, cfg)
+    dt = cdtype(cfg)
+    xg = x.reshape(G, Tg, D)
+
+    logits = xg.astype(jnp.float32) @ p["router"].astype(jnp.float32)  # (G,Tg,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, K)                                # (G,Tg,K)
+
+    # position-in-expert: rank of each (token, k) assignment inside its expert
+    # queue. k-th choices are ranked after all (k-1)-th choices (GShard policy).
+    dispatch = jnp.zeros((G, Tg, E, C), jnp.float32)
+    combine = jnp.zeros((G, Tg, E, C), jnp.float32)
+    prior = jnp.zeros((G, 1, E), jnp.int32)  # tokens already queued per expert
+    for k in range(K):
+        oh = jax.nn.one_hot(topi[..., k], E, dtype=jnp.int32)           # (G,Tg,E)
+        pos = jnp.cumsum(oh, axis=1) - oh + prior                       # (G,Tg,E)
+        prior = prior + oh.sum(axis=1, keepdims=True)
+        pos = jnp.sum(pos * oh, axis=-1)                                # (G,Tg)
+        keep = (pos < C) & (topi[..., k] >= 0)
+        slot = jax.nn.one_hot(jnp.where(keep, pos, C), C, dtype=jnp.float32)  # (G,Tg,C+..)
+        sel = jax.nn.one_hot(topi[..., k], E, dtype=jnp.float32) * keep[..., None]
+        d_k = sel[..., :, None] * slot[..., None, :]                    # (G,Tg,E,C)
+        dispatch = dispatch + d_k
+        combine = combine + d_k * topv[..., k][..., None, None]
+
+    # ---- expert computation (E sharded on the model axis) ----
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch.astype(dt), xg.astype(dt))
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["we1"].astype(dt)))
+    h = h * jnp.einsum("gecd,edf->gecf", xe, p["we3"].astype(dt))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["we2"].astype(dt))           # (G,E,C,D)
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(dt), ye)
+
+    out = y.reshape(B, S, D).astype(x.dtype)
+    if cfg.n_shared_experts:
+        out = out + mlp_apply(x, p["shared"], cfg)
+
+    # Switch-style load-balance auxiliary loss
+    me = jnp.mean(probs, axis=(0, 1))                                   # (E,)
+    fe_frac = jnp.mean(
+        jax.nn.one_hot(topi[..., 0], E, dtype=jnp.float32), axis=(0, 1)
+    )
+    aux = E * jnp.sum(me * fe_frac)
+    return out, aux
+
+
+# ===========================================================================
+# gather-based dispatch (perf alternative, EXPERIMENTS.md §Perf):
+# replaces the O(Tg * E * C) one-hot dispatch MATMULS with scatter/gather
+# index plumbing — ~25% less MoE-layer compute, memory-bound instead of
+# MXU-bound. Same capacity semantics (drops beyond C), same outputs up to
+# dropped-token sets.
+# ===========================================================================
+
+def moe_apply_gather(x: jax.Array, p: Params, cfg) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out, load_balance_aux_loss)."""
+    B, S, D = x.shape
+    T = B * S
+    E, K = cfg.n_experts, cfg.top_k
+    G, Tg = group_shape(T)
+    C = capacity(Tg, cfg)
+    dt = cdtype(cfg)
+    xg = x.reshape(G, Tg, D)
+
+    logits = xg.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, K)                       # (G,Tg,K)
+
+    # position-in-expert per (token, k), GShard rank order
+    pos = jnp.zeros((G, Tg, K), jnp.int32)
+    prior = jnp.zeros((G, 1, E), jnp.int32)
+    for k in range(K):
+        oh = jax.nn.one_hot(topi[..., k], E, dtype=jnp.int32)
+        rank = jnp.cumsum(oh, axis=1) - oh + prior
+        prior = prior + oh.sum(axis=1, keepdims=True)
+        pos = pos.at[..., k].set(jnp.sum(rank * oh, axis=-1))
+    keep = pos < C                                             # (G,Tg,K)
+
+    # scatter token ids into the (E, C) expert queues, then gather inputs
+    tok_ids = jnp.broadcast_to(jnp.arange(Tg)[None, :, None], (G, Tg, K))
+    slot = jnp.where(keep, topi * C + pos, E * C)              # flat queue slot
+    queue = jnp.full((G, E * C + 1), 0, jnp.int32)
+    queue = jax.vmap(lambda q, s, t: q.at[s].set(t))(
+        queue, slot.reshape(G, -1), tok_ids.reshape(G, -1)
+    )[:, : E * C]                                              # (G, E*C)
+    xe = jnp.take_along_axis(
+        xg.astype(dt), queue[..., None].astype(jnp.int32), axis=1
+    ).reshape(G, E, C, D)                                      # gather (all-to-all)
+
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["we1"].astype(dt)))
+    h = h * jnp.einsum("gecd,edf->gecf", xe, p["we3"].astype(dt))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["we2"].astype(dt))  # (G,E,C,D)
+
+    # combine: gather each token's K expert outputs back and weight them
+    flat_ye = ye.reshape(G, E * C, D)
+    safe_slot = jnp.minimum(slot, E * C - 1)
+    picked = jax.vmap(lambda y, s: y[s])(flat_ye, safe_slot.reshape(G, -1))
+    picked = picked.reshape(G, Tg, K, D)
+    w = (topv * keep).astype(dt)
+    y = jnp.einsum("gtk,gtkd->gtd", w, picked)
+
+    out = y.reshape(B, S, D).astype(x.dtype)
+    if cfg.n_shared_experts:
+        out = out + mlp_apply(x, p["shared"], cfg)
+    me = jnp.mean(probs, axis=(0, 1))
+    fe_frac = jnp.mean(jax.nn.one_hot(topi[..., 0], E, dtype=jnp.float32), axis=(0, 1))
+    aux = E * jnp.sum(me * fe_frac)
+    return out, aux

@@ -1,0 +1,39 @@
+"""Activation-sharding context: lets the launcher constrain activation layout
+without threading mesh specifics through every model function.
+
+model.py calls ``constrain(x, "act")`` / ``constrain(z, "z")`` at the seams
+(embed output, DTFL split boundary, pre-head); outside a context these are
+no-ops, so CPU smoke tests never see mesh machinery.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+
+_SPECS: dict[str, object] = {}
+
+
+@contextlib.contextmanager
+def activation_sharding(**specs):
+    """e.g. activation_sharding(act=P('data', None, 'model'), z=P('data', None, None))."""
+    global _SPECS
+    old = dict(_SPECS)
+    _SPECS.update(specs)
+    try:
+        yield
+    finally:
+        _SPECS = old
+
+
+def constrain(x, kind: str = "act"):
+    spec = _SPECS.get(kind)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def get_setting(kind: str):
+    """Non-sharding knobs riding the same context (e.g. 'q_chunk')."""
+    return _SPECS.get(kind)

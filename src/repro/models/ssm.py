@@ -1,0 +1,370 @@
+"""Recurrent sequence mixers: mLSTM / sLSTM (xLSTM) and Mamba-style S6.
+
+Training uses chunkwise-parallel forms (TPU adaptation: the per-step
+recurrences of the GPU reference become chunked scans whose intra-chunk work
+is MXU-shaped matmuls); decoding uses the O(1)-state recurrences.
+
+Simplifications vs the papers (documented in DESIGN.md):
+  * mLSTM uses sigmoid input/forget gates (the exp-gate + stabilizer variant
+    adds bookkeeping without changing system structure). Decay handled in
+    log-space for numerical safety.
+  * sLSTM keeps exponential gating with the m-stabilizer but omits the
+    post-block FFN (xlstm-350m is assigned with d_ff=0).
+  * Mamba drops the depthwise conv's bias and uses a fixed chunk of 16 for
+    the chunked selective scan.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, cdtype, dense_init, rmsnorm
+
+MLSTM_CHUNK = 256
+MAMBA_CHUNK = 16
+
+
+# ===========================================================================
+# mLSTM
+# ===========================================================================
+
+def mlstm_param_init(key, cfg) -> Params:
+    d = cfg.d_model
+    di = 2 * d
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": jnp.ones((d,), jnp.float32),
+        "w_up": dense_init(ks[0], d, di),
+        "w_gate": dense_init(ks[1], d, di),
+        "wq": dense_init(ks[2], di, di),
+        "wk": dense_init(ks[3], di, di),
+        "wv": dense_init(ks[4], di, di),
+        "w_if": dense_init(ks[5], d, 2 * cfg.n_heads, scale=0.02),
+        "b_if": jnp.concatenate(
+            [jnp.zeros((cfg.n_heads,)), 3.0 * jnp.ones((cfg.n_heads,))]
+        ).astype(jnp.float32),
+        "w_down": dense_init(ks[6], di, d),
+    }
+
+
+def _mlstm_chunk_scan(q, k, v, log_f, i_gate, C0, n0):
+    """Chunkwise-parallel mLSTM.
+
+    q,k,v: (B, H, S, dh); log_f, i_gate: (B, H, S); C0: (B, H, dh, dh);
+    n0: (B, H, dh). Returns (h: (B,H,S,dh), C_S, n_S).
+    This is the jnp oracle form mirrored by kernels/mlstm_chunk.py.
+    """
+    B, H, S, dh = q.shape
+    P = min(MLSTM_CHUNK, S)
+    while S % P:
+        P -= 1
+    N = S // P
+    rs = lambda x: x.reshape(B, H, N, P, *x.shape[3:]).swapaxes(0, 2).swapaxes(1, 2)
+    # after rs: leading chunk axis: (N, B, H, P, ...)
+    qc, kc, vc = rs(q), rs(k), rs(v)
+    lfc, igc = rs(log_f), rs(i_gate)
+
+    def body(carry, xs):
+        C, n = carry                            # (B,H,dh,dh), (B,H,dh)
+        qb, kb, vb, lf, ig = xs                 # (B,H,P,dh) ... (B,H,P)
+        cum = jnp.cumsum(lf, axis=-1)           # (B,H,P) log prod f_1..t
+        # decay from chunk start to t (inclusive of f_t)
+        d_in = jnp.exp(cum)                     # multiplies carried state
+        # intra-chunk decay matrix D[t,s] = exp(cum_t - cum_s) * i_s, s <= t
+        diff = cum[..., :, None] - cum[..., None, :]
+        mask = jnp.tril(jnp.ones((P, P), bool))
+        D = jnp.where(mask, jnp.exp(diff) * ig[..., None, :], 0.0)
+        scores = jnp.einsum("bhtd,bhsd->bhts", qb, kb)  # (B,H,P,P)
+        intra = jnp.einsum("bhts,bhse->bhte", scores * D, vb)
+        inter = jnp.einsum("bhde,bhtd->bhte", C, qb) * d_in[..., None]
+        num = intra + inter
+        # normalizer n_t = decay * n0 + sum_s (decay ratio) i_s k_s
+        n_intra = jnp.einsum("bhts,bhsd->bhtd", D, kb)
+        n_t = d_in[..., None] * n[..., None, :] + n_intra
+        denom = jnp.maximum(jnp.abs(jnp.einsum("bhtd,bhtd->bht", n_t, qb)), 1.0)
+        h = num / denom[..., None]
+        # state update to chunk end
+        w = jnp.exp(cum[..., -1:] - cum)        # (B,H,P) decay from t to end
+        C_new = jnp.exp(cum[..., -1])[..., None, None] * C + jnp.einsum(
+            "bhs,bhsd,bhse->bhde", w * ig, kb, vb
+        )
+        n_new = jnp.exp(cum[..., -1])[..., None] * n + jnp.einsum("bhs,bhsd->bhd", w * ig, kb)
+        return (C_new, n_new), h
+
+    (C_f, n_f), hs = jax.lax.scan(body, (C0, n0), (qc, kc, vc, lfc, igc))
+    h = hs.swapaxes(1, 2).swapaxes(0, 2).reshape(B, H, S, dh)
+    return h, C_f, n_f
+
+
+def mlstm_apply(x: jax.Array, p: Params, cfg) -> jax.Array:
+    """Full-sequence mLSTM block. x: (B, S, D)."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dt = cdtype(cfg)
+    h = rmsnorm(x, p["ln"], cfg.norm_eps).astype(dt)
+    u = h @ p["w_up"].astype(dt)                 # (B,S,di)
+    z = h @ p["w_gate"].astype(dt)
+    di = u.shape[-1]
+    dh = di // H
+    q = (u @ p["wq"].astype(dt)).reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+    k = (u @ p["wk"].astype(dt)).reshape(B, S, H, dh).transpose(0, 2, 1, 3) / math.sqrt(dh)
+    v = (u @ p["wv"].astype(dt)).reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+    gates = (h @ p["w_if"].astype(dt)).astype(jnp.float32) + p["b_if"]
+    ig, fg = jnp.split(gates, 2, axis=-1)        # (B,S,H) each
+    ig = jax.nn.sigmoid(ig).transpose(0, 2, 1)
+    log_f = jax.nn.log_sigmoid(fg).transpose(0, 2, 1)
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    hcell, _, _ = _mlstm_chunk_scan(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32), log_f, ig, C0, n0
+    )
+    hcell = hcell.transpose(0, 2, 1, 3).reshape(B, S, di).astype(dt)
+    out = (hcell * jax.nn.silu(z)) @ p["w_down"].astype(dt)
+    return x + out.astype(x.dtype)
+
+
+def mlstm_state_init(cfg, batch: int) -> Params:
+    H = cfg.n_heads
+    dh = 2 * cfg.d_model // H
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+    }
+
+
+def mlstm_decode(x: jax.Array, p: Params, cfg, state: Params) -> tuple[jax.Array, Params]:
+    """One-step mLSTM. x: (B, 1, D)."""
+    B = x.shape[0]
+    H = cfg.n_heads
+    dt = cdtype(cfg)
+    h = rmsnorm(x, p["ln"], cfg.norm_eps).astype(dt)[:, 0]          # (B,D)
+    u = h @ p["w_up"].astype(dt)
+    z = h @ p["w_gate"].astype(dt)
+    di = u.shape[-1]
+    dh = di // H
+    q = (u @ p["wq"].astype(dt)).reshape(B, H, dh).astype(jnp.float32)
+    k = (u @ p["wk"].astype(dt)).reshape(B, H, dh).astype(jnp.float32) / math.sqrt(dh)
+    v = (u @ p["wv"].astype(dt)).reshape(B, H, dh).astype(jnp.float32)
+    gates = (h @ p["w_if"].astype(dt)).astype(jnp.float32) + p["b_if"]
+    ig, fg = jnp.split(gates, 2, axis=-1)                            # (B,H)
+    i_t = jax.nn.sigmoid(ig)
+    f_t = jax.nn.sigmoid(fg)
+    C = f_t[..., None, None] * state["C"] + i_t[..., None, None] * (
+        k[..., :, None] * v[..., None, :]
+    )                                                                 # (B,H,dh,dh) [k x v]
+    n = f_t[..., None] * state["n"] + i_t[..., None] * k
+    num = jnp.einsum("bhde,bhd->bhe", C, q)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)), 1.0)
+    hcell = (num / denom[..., None]).reshape(B, di).astype(dt)
+    out = (hcell * jax.nn.silu(z)) @ p["w_down"].astype(dt)
+    return x + out[:, None].astype(x.dtype), {"C": C, "n": n}
+
+
+# ===========================================================================
+# sLSTM
+# ===========================================================================
+
+def slstm_param_init(key, cfg) -> Params:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 3)
+    return {
+        "ln": jnp.ones((d,), jnp.float32),
+        "w": dense_init(ks[0], d, 4 * d),                    # i,f,z,o pre-acts
+        "r": jax.random.normal(ks[1], (H, dh, 4 * dh), jnp.float32) / math.sqrt(dh),
+        "b": jnp.tile(
+            jnp.concatenate([jnp.zeros((d,)), 3.0 * jnp.ones((d,)), jnp.zeros((2 * d,))]),
+            (1,),
+        ).astype(jnp.float32),
+        "w_down": dense_init(ks[2], d, d),
+    }
+
+
+def _slstm_cell(carry, wx, r):
+    """carry: dict(h,c,n,m) each (B,H,dh); wx: (B,H,4dh) input pre-acts."""
+    h, c, n, m = carry
+    rec = jnp.einsum("bhd,hde->bhe", h, r)                   # (B,H,4dh)
+    pre = wx + rec
+    i_t, f_t, z_t, o_t = jnp.split(pre, 4, axis=-1)
+    m_new = jnp.maximum(f_t + m, i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(f_t + m - m_new)
+    c_new = f_p * c + i_p * jnp.tanh(z_t)
+    n_new = f_p * n + i_p
+    h_new = jax.nn.sigmoid(o_t) * c_new / jnp.maximum(n_new, 1.0)
+    return (h_new, c_new, n_new, m_new)
+
+
+def slstm_apply(x: jax.Array, p: Params, cfg) -> jax.Array:
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dh = D // H
+    dt = cdtype(cfg)
+    hx = rmsnorm(x, p["ln"], cfg.norm_eps).astype(dt)
+    wx = ((hx @ p["w"].astype(dt)).astype(jnp.float32) + p["b"]).reshape(B, S, H, 4 * dh)
+    zeros = jnp.zeros((B, H, dh), jnp.float32)
+    init = (zeros, zeros, zeros, jnp.full((B, H, dh), -jnp.inf, jnp.float32))
+
+    def body(carry, wx_t):
+        new = _slstm_cell(carry, wx_t, p["r"].astype(jnp.float32))
+        return new, new[0]
+
+    _, hs = jax.lax.scan(body, init, wx.swapaxes(0, 1))      # scan over S
+    hs = hs.swapaxes(0, 1).reshape(B, S, D).astype(dt)
+    return x + (hs @ p["w_down"].astype(dt)).astype(x.dtype)
+
+
+def slstm_state_init(cfg, batch: int) -> Params:
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": jnp.full((batch, H, dh), -jnp.inf, jnp.float32)}
+
+
+def slstm_decode(x: jax.Array, p: Params, cfg, state: Params) -> tuple[jax.Array, Params]:
+    B = x.shape[0]
+    H = cfg.n_heads
+    D = cfg.d_model
+    dh = D // H
+    dt = cdtype(cfg)
+    hx = rmsnorm(x, p["ln"], cfg.norm_eps).astype(dt)[:, 0]
+    wx = ((hx @ p["w"].astype(dt)).astype(jnp.float32) + p["b"]).reshape(B, H, 4 * dh)
+    carry = (state["h"], state["c"], state["n"], state["m"])
+    h, c, n, m = _slstm_cell(carry, wx, p["r"].astype(jnp.float32))
+    out = (h.reshape(B, D).astype(dt) @ p["w_down"].astype(dt))[:, None]
+    return x + out.astype(x.dtype), {"h": h, "c": c, "n": n, "m": m}
+
+
+# ===========================================================================
+# Mamba-style S6 (hymba's SSM heads)
+# ===========================================================================
+
+def mamba_param_init(key, cfg, d_in: int | None = None) -> Params:
+    d = d_in or cfg.d_model
+    di = d  # hymba: SSM heads operate at model width
+    N = cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": dense_init(ks[0], d, 2 * di),
+        "conv": jax.random.normal(ks[1], (cfg.d_conv, di), jnp.float32) * 0.1,
+        "w_bc": dense_init(ks[2], di, 2 * N, scale=0.02),
+        "w_dt": dense_init(ks[3], di, di, scale=0.02),
+        "b_dt": jnp.full((di,), -4.6, jnp.float32),  # softplus^-1(0.01)
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32), (di, 1))),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "w_out": dense_init(ks[4], di, d),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B, S, di); w: (k, di)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    return sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(k))
+
+
+def mamba_scan(a: jax.Array, b: jax.Array, h0: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """h_t = a_t * h_{t-1} + b_t, chunked associative scan.
+
+    a, b: (B, S, di, N); h0: (B, di, N). Returns (h all steps, h_last)."""
+    B, S, di, N = a.shape
+    P = min(MAMBA_CHUNK, S)
+    while S % P:
+        P -= 1
+    n = S // P
+    ar = a.reshape(B, n, P, di, N).swapaxes(0, 1)
+    br = b.reshape(B, n, P, di, N).swapaxes(0, 1)
+
+    def combine(l, r):
+        al, bl = l
+        ar_, br_ = r
+        return al * ar_, bl * ar_ + br_
+
+    def body(h, xs):
+        ac, bc = xs                                   # (B,P,di,N)
+        aa, bb = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        hs = aa * h[:, None] + bb                     # (B,P,di,N)
+        return hs[:, -1], hs
+
+    h_last, hs = jax.lax.scan(body, h0, (ar, br))
+    hs = hs.swapaxes(0, 1).reshape(B, S, di, N)
+    return hs, h_last
+
+
+def mamba_apply(x: jax.Array, p: Params, cfg) -> jax.Array:
+    """Full-sequence S6. x: (B, S, D) -> (B, S, D) (no residual; caller adds).
+
+    The (B, S, di, N) discretized a/b tensors are never materialized for the
+    full sequence: the scan over time chunks computes them per chunk (the
+    associative scan runs inside the chunk), keeping the working set
+    O(B * P * di * N)."""
+    B, S, D = x.shape
+    dt = cdtype(cfg)
+    N = cfg.ssm_state
+    u = x.astype(dt) @ p["w_in"].astype(dt)
+    xs, z = jnp.split(u, 2, axis=-1)                  # (B,S,di) each
+    xs = jax.nn.silu(_causal_conv(xs, p["conv"].astype(dt)))
+    xf = xs.astype(jnp.float32)
+    di = xf.shape[-1]
+    A = -jnp.exp(p["a_log"])                          # (di,N)
+
+    P = min(MAMBA_CHUNK, S)
+    while S % P:
+        P -= 1
+    n = S // P
+    xc = xf.reshape(B, n, P, di).swapaxes(0, 1)       # (n,B,P,di)
+
+    def combine(l, r):
+        al, bl = l
+        ar_, br_ = r
+        return al * ar_, bl * ar_ + br_
+
+    def body(h, xch):                                  # xch: (B,P,di)
+        bc = xch @ p["w_bc"].astype(jnp.float32)
+        Bt, Ct = jnp.split(bc, 2, axis=-1)             # (B,P,N)
+        dt_t = jax.nn.softplus(xch @ p["w_dt"] + p["b_dt"])   # (B,P,di)
+        a = jnp.exp(dt_t[..., None] * A)               # (B,P,di,N)
+        b = dt_t[..., None] * Bt[..., None, :] * xch[..., None]
+        aa, bb = jax.lax.associative_scan(combine, (a, b), axis=1)
+        hs = aa * h[:, None] + bb                      # (B,P,di,N)
+        y = jnp.einsum("bpdn,bpn->bpd", hs, Ct)
+        return hs[:, -1], y
+
+    _, ys = jax.lax.scan(body, jnp.zeros((B, di, N), jnp.float32), xc)
+    y = ys.swapaxes(0, 1).reshape(B, S, di) + p["d_skip"] * xf
+    y = (y.astype(dt) * jax.nn.silu(z)) @ p["w_out"].astype(dt)
+    return y.astype(x.dtype)
+
+
+def mamba_state_init(cfg, batch: int, d_in: int | None = None) -> Params:
+    di = d_in or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, di, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, di), jnp.float32),
+    }
+
+
+def mamba_decode(x: jax.Array, p: Params, cfg, state: Params) -> tuple[jax.Array, Params]:
+    """One-step S6. x: (B, 1, D)."""
+    B = x.shape[0]
+    dt = cdtype(cfg)
+    u = x.astype(dt)[:, 0] @ p["w_in"].astype(dt)
+    xs, z = jnp.split(u, 2, axis=-1)                  # (B,di)
+    hist = jnp.concatenate([state["conv"], xs[:, None].astype(jnp.float32)], axis=1)
+    w = p["conv"]                                     # (k,di)
+    xc = jnp.einsum("bkd,kd->bd", hist, w)
+    xc = jax.nn.silu(xc)
+    bc = xc @ p["w_bc"]
+    Bt, Ct = jnp.split(bc, 2, axis=-1)
+    dt_t = jax.nn.softplus(xc @ p["w_dt"] + p["b_dt"])
+    A = -jnp.exp(p["a_log"])
+    a = jnp.exp(dt_t[..., None] * A)                  # (B,di,N)
+    b = dt_t[..., None] * Bt[:, None, :] * xc[..., None]
+    h = a * state["h"] + b
+    y = jnp.einsum("bdn,bn->bd", h, Ct) + p["d_skip"] * xc
+    y = (y.astype(dt) * jax.nn.silu(z)) @ p["w_out"].astype(dt)
+    new_state = {"h": h, "conv": hist[:, 1:]}
+    return y[:, None].astype(x.dtype), new_state

@@ -1,0 +1,336 @@
+"""Block definitions per architecture family + the scanned layer stack.
+
+All layer parameters are *stacked* on a leading layer axis and consumed via
+``lax.scan``; a DTFL tier is a slice index into that axis (core/tiering.py).
+
+Block kinds:
+  dense   : GQA attention + SwiGLU MLP
+  moe     : GQA attention + (shared + routed top-k) MoE FFN
+  ssm     : xLSTM block — per-layer flag selects mLSTM or sLSTM cell
+  hybrid  : hymba block — parallel attention + mamba heads, fused, then MLP
+  enc     : bidirectional attention + MLP (whisper encoder)
+  dec     : causal self-attn + cross-attn + MLP (whisper decoder)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.shardctx import constrain
+from repro.models.layers import (
+    Params,
+    attn_apply,
+    attn_decode_apply,
+    attn_param_init,
+    cdtype,
+    cross_attn_decode_apply,
+    dense_init,
+    mlp_apply,
+    mlp_param_init,
+    rmsnorm,
+)
+
+
+def block_kind(cfg) -> str:
+    return {
+        "dense": "dense",
+        "vlm": "dense",
+        "moe": "moe",
+        "ssm": "ssm",
+        "hybrid": "hybrid",
+        "encdec": "dec",
+    }[cfg.family]
+
+
+# ===========================================================================
+# per-block init
+# ===========================================================================
+
+def block_init(key, cfg, kind: str) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    if kind in ("dense", "enc"):
+        return {
+            "ln1": jnp.ones((d,), jnp.float32),
+            "attn": attn_param_init(ks[0], cfg),
+            "ln2": jnp.ones((d,), jnp.float32),
+            "mlp": mlp_param_init(ks[1], d, cfg.d_ff),
+        }
+    if kind == "moe":
+        return {
+            "ln1": jnp.ones((d,), jnp.float32),
+            "attn": attn_param_init(ks[0], cfg),
+            "ln2": jnp.ones((d,), jnp.float32),
+            "moe": moe_lib.moe_param_init(ks[1], cfg),
+        }
+    if kind == "ssm":
+        return {
+            "mlstm": ssm_lib.mlstm_param_init(ks[0], cfg),
+            "slstm": ssm_lib.slstm_param_init(ks[1], cfg),
+        }
+    if kind == "hybrid":
+        return {
+            "ln1": jnp.ones((d,), jnp.float32),
+            "attn": attn_param_init(ks[0], cfg),
+            "mamba": ssm_lib.mamba_param_init(ks[1], cfg),
+            "beta_attn": jnp.ones((d,), jnp.float32),
+            "beta_ssm": jnp.ones((d,), jnp.float32),
+            "ln_attn": jnp.ones((d,), jnp.float32),
+            "ln_ssm": jnp.ones((d,), jnp.float32),
+            "ln2": jnp.ones((d,), jnp.float32),
+            "mlp": mlp_param_init(ks[2], d, cfg.d_ff),
+        }
+    if kind == "dec":
+        return {
+            "ln1": jnp.ones((d,), jnp.float32),
+            "attn": attn_param_init(ks[0], cfg),
+            "ln_x": jnp.ones((d,), jnp.float32),
+            "xattn": attn_param_init(ks[1], cfg),
+            "ln2": jnp.ones((d,), jnp.float32),
+            "mlp": mlp_param_init(ks[2], d, cfg.d_ff),
+        }
+    raise ValueError(kind)
+
+
+def stack_init(key, cfg, kind: str, n_layers: int) -> Params:
+    keys = jax.random.split(key, n_layers)
+    stacked = jax.vmap(lambda k: block_init(k, cfg, kind))(keys)
+    if kind == "ssm" and cfg.slstm_every:
+        # float flags: bools can't pass through value_and_grad'd trees
+        flags = (jnp.arange(n_layers) % cfg.slstm_every) == (cfg.slstm_every - 1)
+        stacked["is_slstm"] = flags.astype(jnp.float32)
+    return stacked
+
+
+# ===========================================================================
+# per-block apply (full sequence)
+# ===========================================================================
+
+def block_apply(
+    x: jax.Array,
+    bp: Params,
+    cfg,
+    kind: str,
+    *,
+    enc_out: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (x_out, moe_aux_loss)."""
+    zero = jnp.zeros((), jnp.float32)
+    if kind in ("dense", "enc"):
+        causal = kind != "enc"
+        x = x + attn_apply(rmsnorm(x, bp["ln1"], cfg.norm_eps), bp["attn"], cfg, causal=causal)
+        x = x + mlp_apply(rmsnorm(x, bp["ln2"], cfg.norm_eps), bp["mlp"], cfg)
+        return x, zero
+    if kind == "moe":
+        x = x + attn_apply(rmsnorm(x, bp["ln1"], cfg.norm_eps), bp["attn"], cfg, causal=True)
+        y, aux = moe_lib.moe_apply(rmsnorm(x, bp["ln2"], cfg.norm_eps), bp["moe"], cfg)
+        return x + y, aux
+    if kind == "ssm":
+        if "is_slstm" in bp:
+            x = jax.lax.cond(
+                bp["is_slstm"] > 0.5,
+                lambda x: ssm_lib.slstm_apply(x, bp["slstm"], cfg),
+                lambda x: ssm_lib.mlstm_apply(x, bp["mlstm"], cfg),
+                x,
+            )
+        else:
+            x = ssm_lib.mlstm_apply(x, bp["mlstm"], cfg)
+        return x, zero
+    if kind == "hybrid":
+        h = rmsnorm(x, bp["ln1"], cfg.norm_eps)
+        a = attn_apply(h, bp["attn"], cfg, causal=True, window=cfg.window)
+        m = ssm_lib.mamba_apply(h, bp["mamba"], cfg)
+        fused = 0.5 * (
+            bp["beta_attn"] * rmsnorm(a, bp["ln_attn"], cfg.norm_eps)
+            + bp["beta_ssm"] * rmsnorm(m, bp["ln_ssm"], cfg.norm_eps)
+        ).astype(x.dtype)
+        x = x + fused
+        x = x + mlp_apply(rmsnorm(x, bp["ln2"], cfg.norm_eps), bp["mlp"], cfg)
+        return x, zero
+    if kind == "dec":
+        x = x + attn_apply(rmsnorm(x, bp["ln1"], cfg.norm_eps), bp["attn"], cfg, causal=True)
+        x = x + attn_apply(
+            rmsnorm(x, bp["ln_x"], cfg.norm_eps), bp["xattn"], cfg,
+            causal=False, kv_source=enc_out, use_rope=False,
+        )
+        x = x + mlp_apply(rmsnorm(x, bp["ln2"], cfg.norm_eps), bp["mlp"], cfg)
+        return x, zero
+    raise ValueError(kind)
+
+
+def stack_apply(
+    x: jax.Array,
+    stacked: Params,
+    cfg,
+    kind: str,
+    *,
+    enc_out: jax.Array | None = None,
+    remat: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Scan x through the stacked blocks. Returns (x, total_moe_aux)."""
+    fn = functools.partial(block_apply, cfg=cfg, kind=kind, enc_out=enc_out)
+    if remat:
+        fn = jax.checkpoint(fn)
+
+    def body(x, bp):
+        x, aux = fn(x, bp)
+        # pin the carry layout every layer so saved remat residuals stay sharded
+        return constrain(x, "act"), aux
+
+    x, auxs = jax.lax.scan(body, x, stacked)
+    return x, jnp.sum(auxs)
+
+
+# ===========================================================================
+# per-block decode (one token, carried cache)
+# ===========================================================================
+
+def block_cache_init(cfg, kind: str, batch: int, cache_len: int) -> Params:
+    """Single-layer cache template (stacked by the caller)."""
+    hd = cfg.resolved_head_dim
+    kvh = cfg.n_kv_heads
+    dt = cdtype(cfg)
+    if kind in ("dense", "moe", "enc"):
+        return {
+            "k": jnp.zeros((batch, cache_len, kvh, hd), dt),
+            "v": jnp.zeros((batch, cache_len, kvh, hd), dt),
+        }
+    if kind == "ssm":
+        return {
+            "mlstm": ssm_lib.mlstm_state_init(cfg, batch),
+            "slstm": ssm_lib.slstm_state_init(cfg, batch),
+        }
+    if kind == "hybrid":
+        return {
+            "k": jnp.zeros((batch, cache_len, kvh, hd), dt),
+            "v": jnp.zeros((batch, cache_len, kvh, hd), dt),
+            "mamba": ssm_lib.mamba_state_init(cfg, batch),
+        }
+    if kind == "dec":
+        return {
+            "k": jnp.zeros((batch, cache_len, kvh, hd), dt),
+            "v": jnp.zeros((batch, cache_len, kvh, hd), dt),
+            "xk": jnp.zeros((batch, cfg.n_frontend_tokens, kvh, hd), dt),
+            "xv": jnp.zeros((batch, cfg.n_frontend_tokens, kvh, hd), dt),
+        }
+    raise ValueError(kind)
+
+
+def block_decode(
+    x: jax.Array,
+    bp: Params,
+    cache: Params,
+    cfg,
+    kind: str,
+    pos: jax.Array,
+    *,
+    ring: bool,
+) -> tuple[jax.Array, Params, jax.Array]:
+    """One-token step for a single block. Returns (x, new_cache, moe_aux)."""
+    zero = jnp.zeros((), jnp.float32)
+    if kind in ("dense", "moe"):
+        y, kv = attn_decode_apply(
+            rmsnorm(x, bp["ln1"], cfg.norm_eps), bp["attn"], cfg,
+            {"k": cache["k"], "v": cache["v"]}, pos, ring=ring,
+        )
+        x = x + y
+        h = rmsnorm(x, bp["ln2"], cfg.norm_eps)
+        if kind == "moe":
+            y2, aux = moe_lib.moe_apply(h, bp["moe"], cfg)
+        else:
+            y2, aux = mlp_apply(h, bp["mlp"], cfg), zero
+        return x + y2, {**cache, **kv}, aux
+    if kind == "ssm":
+        if "is_slstm" in bp:
+            def do_slstm(args):
+                x, st = args
+                y, s = ssm_lib.slstm_decode(x, bp["slstm"], cfg, st["slstm"])
+                return y, {**st, "slstm": s}
+
+            def do_mlstm(args):
+                x, st = args
+                y, s = ssm_lib.mlstm_decode(x, bp["mlstm"], cfg, st["mlstm"])
+                return y, {**st, "mlstm": s}
+
+            x, cache = jax.lax.cond(bp["is_slstm"] > 0.5, do_slstm, do_mlstm, (x, cache))
+        else:
+            x, s = ssm_lib.mlstm_decode(x, bp["mlstm"], cfg, cache["mlstm"])
+            cache = {**cache, "mlstm": s}
+        return x, cache, zero
+    if kind == "hybrid":
+        h = rmsnorm(x, bp["ln1"], cfg.norm_eps)
+        a, kv = attn_decode_apply(h, bp["attn"], cfg, {"k": cache["k"], "v": cache["v"]}, pos, ring=ring)
+        m, mstate = ssm_lib.mamba_decode(h, bp["mamba"], cfg, cache["mamba"])
+        fused = 0.5 * (
+            bp["beta_attn"] * rmsnorm(a, bp["ln_attn"], cfg.norm_eps)
+            + bp["beta_ssm"] * rmsnorm(m, bp["ln_ssm"], cfg.norm_eps)
+        ).astype(x.dtype)
+        x = x + fused
+        x = x + mlp_apply(rmsnorm(x, bp["ln2"], cfg.norm_eps), bp["mlp"], cfg)
+        return x, {**cache, **kv, "mamba": mstate}, zero
+    if kind == "dec":
+        y, kv = attn_decode_apply(
+            rmsnorm(x, bp["ln1"], cfg.norm_eps), bp["attn"], cfg,
+            {"k": cache["k"], "v": cache["v"]}, pos, ring=ring,
+        )
+        x = x + y
+        x = x + cross_attn_decode_apply(
+            rmsnorm(x, bp["ln_x"], cfg.norm_eps), bp["xattn"], cfg, cache["xk"], cache["xv"]
+        )
+        x = x + mlp_apply(rmsnorm(x, bp["ln2"], cfg.norm_eps), bp["mlp"], cfg)
+        return x, {**cache, **kv}, zero
+    raise ValueError(kind)
+
+
+def stack_decode(
+    x: jax.Array,
+    stacked: Params,
+    cache: Params,
+    cfg,
+    kind: str,
+    pos: jax.Array,
+    *,
+    ring: bool,
+) -> tuple[jax.Array, Params, jax.Array]:
+    """Scan one token through all blocks, threading per-layer cache slices."""
+
+    def body(x, xs):
+        bp, cl = xs
+        x, cl, aux = block_decode(x, bp, cl, cfg, kind, pos, ring=ring)
+        return x, (cl, aux)
+
+    x, (new_cache, auxs) = jax.lax.scan(body, x, (stacked, cache))
+    return x, new_cache, jnp.sum(auxs)
+
+
+# ===========================================================================
+# prefill: full forward that also emits the KV cache
+# ===========================================================================
+
+def block_prefill(x, bp, cfg, kind, *, enc_out=None):
+    """Full-seq forward emitting this block's cache (attention k/v or state).
+
+    Used by serve prefill. Returns (x, cache_slice, aux)."""
+    # Recompute k/v the same way attn_apply does; to avoid drift we inline a
+    # lightweight projection here only for cache emission.
+    from repro.models.layers import apply_rope  # local import to avoid cycle
+
+    zero = jnp.zeros((), jnp.float32)
+    if kind in ("dense", "moe", "hybrid", "dec"):
+        B, S, D = x.shape
+        hd = cfg.resolved_head_dim
+        dt = cdtype(cfg)
+        h = rmsnorm(x, bp["ln1"], cfg.norm_eps).astype(dt)
+        k = (h @ bp["attn"]["wk"].astype(dt)).reshape(B, S, cfg.n_kv_heads, hd)
+        v = (h @ bp["attn"]["wv"].astype(dt)).reshape(B, S, cfg.n_kv_heads, hd)
+        k = apply_rope(k, jnp.arange(S), cfg.rope_theta)
+        kv = {"k": k, "v": v}
+    else:
+        kv = {}
+    x, aux = block_apply(x, bp, cfg, kind, enc_out=enc_out)
+    return x, kv, aux

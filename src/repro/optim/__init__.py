@@ -1,0 +1,126 @@
+"""Pure-JAX optimizers: SGD, Adam, Yogi (+ plateau LR schedule).
+
+Built from scratch (no optax in the container). The paper uses ADAM with
+lr 1e-3 (1e-4 for HAM10000) and a reduce-on-plateau x0.9 schedule; FedYogi
+uses the Yogi server optimizer (Reddi et al. 2020).
+
+Optimizer is a (init, update) pair over arbitrary pytrees. The learning rate
+is carried inside the state so host-side schedules (plateau) can adjust it
+between rounds without recompiling.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+OptState = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Params], OptState]
+    update: Callable[[Params, Params, OptState], tuple[Params, OptState]]
+
+
+# ---------------------------------------------------------------------------
+# SGD
+# ---------------------------------------------------------------------------
+
+def sgd(lr: float = 0.01, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        state = {"lr": jnp.asarray(lr, jnp.float32)}
+        if momentum:
+            state["mu"] = jax.tree.map(jnp.zeros_like, params)
+        return state
+
+    def update(params, grads, state):
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+            params = jax.tree.map(lambda p, m: p - state["lr"] * m, params, mu)
+            return params, {**state, "mu": mu}
+        params = jax.tree.map(lambda p, g: p - state["lr"] * g, params, grads)
+        return params, state
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adam / Yogi
+# ---------------------------------------------------------------------------
+
+def _adamlike(lr, b1, b2, eps, yogi: bool) -> Optimizer:
+    def init(params):
+        return {
+            "lr": jnp.asarray(lr, jnp.float32),
+            "t": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(jnp.zeros_like, params),
+            "v": jax.tree.map(jnp.zeros_like, params),
+        }
+
+    def update(params, grads, state):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+        if yogi:
+            # Yogi: v -= (1-b2) * sign(v - g^2) * g^2  (additive, sign-controlled)
+            v = jax.tree.map(
+                lambda v_, g: v_ - (1 - b2) * jnp.sign(v_ - g * g) * g * g,
+                state["v"],
+                grads,
+            )
+        else:
+            v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            mh = m_ / bc1
+            vh = v_ / bc2
+            return p - state["lr"] * mh / (jnp.sqrt(jnp.maximum(vh, 0.0)) + eps)
+
+        params = jax.tree.map(upd, params, m, v)
+        return params, {**state, "t": t, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def adam(lr: float = 1e-3, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    return _adamlike(lr, b1, b2, eps, yogi=False)
+
+
+def yogi(lr: float = 1e-2, b1: float = 0.9, b2: float = 0.99, eps: float = 1e-3) -> Optimizer:
+    return _adamlike(lr, b1, b2, eps, yogi=True)
+
+
+def set_lr(opt_state: OptState, lr: float) -> OptState:
+    return {**opt_state, "lr": jnp.asarray(lr, jnp.float32)}
+
+
+def get_lr(opt_state: OptState) -> float:
+    return float(opt_state["lr"])
+
+
+# ---------------------------------------------------------------------------
+# reduce-on-plateau schedule (paper A.3: x0.9 when accuracy plateaus)
+# ---------------------------------------------------------------------------
+
+class PlateauSchedule:
+    def __init__(self, factor: float = 0.9, patience: int = 5, min_delta: float = 1e-3):
+        self.factor = factor
+        self.patience = patience
+        self.min_delta = min_delta
+        self.best = -float("inf")
+        self.bad = 0
+
+    def step(self, metric: float, lr: float) -> float:
+        """Call once per round with the current accuracy; returns the new lr."""
+        if metric > self.best + self.min_delta:
+            self.best = metric
+            self.bad = 0
+            return lr
+        self.bad += 1
+        if self.bad >= self.patience:
+            self.bad = 0
+            return lr * self.factor
+        return lr

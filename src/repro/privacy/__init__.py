@@ -1,0 +1,49 @@
+"""Privacy add-ons (paper §4.4): distance correlation + patch shuffling.
+
+* ``dcor(x, z)`` — (biased) sample distance correlation between raw inputs
+  and the intermediate representation z, used as a regularizer
+  ``(1-a)·task_loss + a·DCor(x, z)`` (Vepakomma et al. 2020 / NoPeek).
+  The O(B^2·d) pairwise-distance hot spot has a Pallas kernel
+  (kernels/dcor.py); this module is the pure-jnp reference used by default.
+
+* ``patch_shuffle`` — permutes spatial patches / sequence chunks of the
+  intermediate activations before upload (Yao et al. 2022).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _pairwise_dist(x2d: jax.Array) -> jax.Array:
+    """Euclidean distance matrix, (B, B) fp32."""
+    x = x2d.astype(jnp.float32)
+    sq = jnp.sum(x * x, axis=-1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (x @ x.T)
+    return jnp.sqrt(jnp.maximum(d2, 1e-12))
+
+
+def _center(d: jax.Array) -> jax.Array:
+    return d - d.mean(0, keepdims=True) - d.mean(1, keepdims=True) + d.mean()
+
+
+def dcor(x: jax.Array, z: jax.Array) -> jax.Array:
+    """Distance correlation in [0, 1]. Leading axis = batch; rest flattened."""
+    B = x.shape[0]
+    a = _center(_pairwise_dist(x.reshape(B, -1)))
+    b = _center(_pairwise_dist(z.reshape(B, -1)))
+    dcov2 = jnp.mean(a * b)
+    dvar_x = jnp.mean(a * a)
+    dvar_z = jnp.mean(b * b)
+    return jnp.sqrt(jnp.maximum(dcov2, 0.0) / jnp.sqrt(dvar_x * dvar_z + 1e-12) + 1e-12)
+
+
+def patch_shuffle(key, z: jax.Array, n_patches: int = 16) -> jax.Array:
+    """Shuffle contiguous chunks of z along the token/spatial axis (axis 1)."""
+    B, S = z.shape[0], z.shape[1]
+    p = n_patches
+    while S % p:
+        p -= 1
+    perm = jax.random.permutation(key, p)
+    zs = z.reshape(B, p, S // p, *z.shape[2:])
+    return zs[:, perm].reshape(z.shape)

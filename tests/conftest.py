@@ -1,0 +1,15 @@
+import os
+
+# Smoke tests and benches see ONE device; only the dry-run forces 512
+# (repro.launch.dryrun sets XLA_FLAGS itself, in its own process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,123 @@
+"""Core DTFL semantics: local-loss isolation, aggregation, time model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.configs import get_config
+from repro.configs.resnet_cifar import RESNET56, RESNET110
+from repro.core import aggregation, local_loss, tiering, timemodel
+from repro.models import model as M
+
+
+@pytest.fixture
+def cfg():
+    return get_config("smollm-360m").reduced().replace(
+        tie_embeddings=False, n_modules=3
+    )
+
+
+def test_gradient_isolation(cfg, key):
+    """No gradient flows server->client: the client update must be identical
+    whatever the server-side parameters are (the paper's parallel-update
+    property that removes the SL synchronization stall)."""
+    params = M.init(key, cfg)
+    opt = optim.sgd(0.1)
+    batch = {"tokens": jnp.zeros((2, 8), jnp.int32), "labels": jnp.ones((2, 8), jnp.int32)}
+    step = jax.jit(local_loss.make_dtfl_train_step(cfg, opt))
+
+    st1 = local_loss.init_tier_state(key, cfg, params, 1, opt)
+    out1, _ = step(st1, batch)
+
+    # scramble the server params; client/aux results must not change
+    scrambled = jax.tree.map(lambda a: a * 3.0 + 1.0, st1.server_params)
+    st2 = st1._replace(server_params=scrambled,
+                       server_opt=opt.init(scrambled))
+    out2, _ = step(st2, batch)
+    assert jax.tree.all(jax.tree.map(jnp.array_equal, out1.client_params, out2.client_params))
+    assert jax.tree.all(jax.tree.map(jnp.array_equal, out1.aux_params, out2.aux_params))
+
+
+def test_both_losses_decrease(cfg, key):
+    params = M.init(key, cfg)
+    opt = optim.adam(1e-3)
+    state = local_loss.init_tier_state(key, cfg, params, 1, opt)
+    step = jax.jit(local_loss.make_dtfl_train_step(cfg, opt))
+    batch = {"tokens": jnp.zeros((4, 16), jnp.int32),
+             "labels": jnp.full((4, 16), 3, jnp.int32)}
+    state, m0 = step(state, batch)
+    for _ in range(10):
+        state, m = step(state, batch)
+    assert float(m.client_loss) < float(m0.client_loss)
+    assert float(m.server_loss) < float(m0.server_loss)
+
+
+def test_weighted_average():
+    t1 = {"a": jnp.ones((2, 2)), "b": jnp.zeros(3)}
+    t2 = {"a": 3 * jnp.ones((2, 2)), "b": jnp.ones(3)}
+    avg = aggregation.weighted_average([t1, t2], [1.0, 3.0])
+    assert jnp.allclose(avg["a"], 2.5)
+    assert jnp.allclose(avg["b"], 0.75)
+
+
+def test_cross_tier_aggregation_equals_merged_average(cfg, key):
+    params = M.init(key, cfg)
+    k2 = jax.random.split(key)[0]
+    params2 = M.init(k2, cfg)
+    c1, s1 = tiering.split_params(params, cfg, 1)
+    c2, s2 = tiering.split_params(params2, cfg, 2)
+    got = aggregation.aggregate_dtfl_round(cfg, [(1, c1, s1), (2, c2, s2)], [1.0, 1.0])
+    want = aggregation.weighted_average([params, params2], [1.0, 1.0])
+    assert jax.tree.all(jax.tree.map(lambda a, b: jnp.allclose(a, b), got, want))
+
+
+# ---------------------------------------------------------------------------
+# time model
+# ---------------------------------------------------------------------------
+
+def test_eq5_composition():
+    costs = timemodel.resnet_tier_costs(RESNET56, batch_size=100)
+    prof = timemodel.ResourceProfile(1.0, 30.0)
+    t = timemodel.simulate_client_times(costs, 2, prof, 10)
+    assert t["total"] == pytest.approx(max(t["client"] + t["comm"], t["server"] + t["comm"]))
+
+
+def test_tier_monotonicity_resnet():
+    """Higher tier => more client compute, fewer bytes (paper Table 1 shape)."""
+    costs = timemodel.resnet_tier_costs(RESNET110, batch_size=100)
+    assert np.all(np.diff(costs.client_flops) > 0)
+    assert np.all(np.diff(costs.server_flops) < 0)
+    # z bytes peak at md2/md3 (channel expansion) then shrink with the spatial
+    # downsampling — the same shape as the paper's Table-1 communication row
+    assert np.all(np.diff(costs.z_bytes[1:]) <= 0)
+    assert costs.z_bytes[-1] < costs.z_bytes[1]
+    assert np.all(np.diff(costs.client_param_bytes) > 0)
+
+
+def test_table2_normalized_ratio_profile_independent():
+    """Normalized per-tier times have client-independent ratios (Table 2)."""
+    costs = timemodel.resnet_tier_costs(RESNET56, batch_size=100)
+    t_fast = costs.client_flops / timemodel.ResourceProfile(4.0, 100.0).flops
+    t_slow = costs.client_flops / timemodel.ResourceProfile(0.2, 30.0).flops
+    np.testing.assert_allclose(t_fast / t_fast[0], t_slow / t_slow[0], rtol=1e-12)
+
+
+def test_transformer_costs_full_flops_sane():
+    cfg = get_config("yi-6b")
+    costs = timemodel.transformer_tier_costs(cfg, batch_size=8, seq_len=256)
+    # full model flops > any split side
+    assert costs.full_flops > costs.client_flops.max() * 0.5
+    assert costs.full_param_bytes == pytest.approx(
+        M.count_params_analytic(cfg.replace(tie_embeddings=False)) * 4, rel=0.01
+    )
+
+
+def test_offloading_helps_slow_clients():
+    """A weak client's total time should be better at SOME low tier than at
+    the top tier — the paper's Table-1 phenomenon that motivates tiering."""
+    costs = timemodel.resnet_tier_costs(RESNET110, batch_size=100)
+    weak = timemodel.ResourceProfile(0.2, 30.0)
+    times = [timemodel.simulate_client_times(costs, m, weak, 10)["total"]
+             for m in range(costs.n_tiers)]
+    assert np.argmin(times) < costs.n_tiers - 1

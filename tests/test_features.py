@@ -1,0 +1,241 @@
+"""Beyond-paper framework features: padded vocab, M-tier deployments,
+sharding presets, serve variants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import INPUT_SHAPES
+from repro.core.local_loss import token_xent
+from repro.core.scheduler import DynamicTierScheduler, TierProfile
+from repro.models import model as M
+
+
+# ---------------------------------------------------------------------------
+# Megatron-style vocab padding
+# ---------------------------------------------------------------------------
+
+def test_padded_vocab_masked_and_finite(key):
+    cfg = get_config("granite-3-2b").reduced().replace(
+        dtype="float32", tie_embeddings=False, vocab=499, pad_vocab_multiple=64
+    )
+    assert cfg.padded_vocab == 512
+    params = M.init(key, cfg)
+    batch = {
+        "tokens": jax.random.randint(key, (2, 8), 0, cfg.vocab),
+        "labels": jax.random.randint(key, (2, 8), 0, cfg.vocab),
+    }
+    logits, _ = M.forward(params, cfg, batch)
+    assert logits.shape[-1] == 512
+    # padded rows can never win the argmax and never blow up the loss
+    assert bool((jnp.argmax(logits, -1) < cfg.vocab).all())
+    assert bool(jnp.isfinite(token_xent(logits, batch["labels"])))
+
+
+def test_padded_vocab_decode(key):
+    cfg = get_config("yi-6b").reduced().replace(
+        dtype="float32", vocab=500, pad_vocab_multiple=128
+    )
+    params = M.init(key, cfg)
+    cache = M.init_cache(cfg, 2, 8)
+    logits, cache = M.decode_step(params, cfg, jnp.zeros((2,), jnp.int32), cache)
+    assert logits.shape == (2, cfg.padded_vocab)
+    assert bool((jnp.argmax(logits, -1) < cfg.vocab).all())
+
+
+# ---------------------------------------------------------------------------
+# M-tier deployments (paper Table 11 semantics)
+# ---------------------------------------------------------------------------
+
+def test_m_tier_subset_scheduling():
+    prof = TierProfile(
+        t_client_ref=np.arange(1.0, 8.0),
+        t_server_ref=np.zeros(7),
+        d_size=np.zeros(7),
+    )
+    s = DynamicTierScheduler(prof, n_clients=2, allowed=[5, 6])  # M=2 deployment
+    assign = s.schedule()
+    assert set(assign.values()) <= {5, 6}
+    s.observe(0, tier=6, total_client_time=100.0, nu=1e9, n_batches=1)
+    s.observe(1, tier=6, total_client_time=1.0, nu=1e9, n_batches=1)
+    assign = s.schedule()
+    assert set(assign.values()) <= {5, 6}  # never leaves the deployment's tiers
+
+
+def test_more_tiers_never_hurt():
+    """With the full tier set available, the schedule's straggler is <= the
+    straggler under any restricted (smaller-M) deployment."""
+    rng = np.random.default_rng(0)
+    prof = TierProfile(
+        t_client_ref=np.sort(rng.uniform(1, 10, 7)),
+        t_server_ref=np.sort(rng.uniform(0.5, 5, 7))[::-1].copy(),
+        d_size=np.sort(rng.uniform(1e5, 1e7, 7))[::-1].copy(),
+    )
+    speeds = [4.0, 1.0, 0.1]
+
+    def run(allowed):
+        s = DynamicTierScheduler(prof, n_clients=3, allowed=allowed)
+        for _ in range(4):
+            assign = s.schedule()
+            for k, cpu in enumerate(speeds):
+                tier = assign[k]
+                t = prof.t_client_ref[tier] * 10 / cpu
+                s.observe(k, tier=tier, total_client_time=t, nu=1e9, n_batches=10)
+        assign = s.schedule()
+        return s.round_time(assign)
+
+    full = run(list(range(7)))
+    for m in (1, 2, 4):
+        assert full <= run(list(range(7))[-m:]) + 1e-9, m
+
+
+# ---------------------------------------------------------------------------
+# sharding presets produce valid specs (host-side; no 512-device mesh needed)
+# ---------------------------------------------------------------------------
+
+def test_preset_specs_shapes():
+    from jax.sharding import PartitionSpec as P
+    from repro.launch import specs as S
+    from repro.launch.mesh import make_host_mesh
+
+    cfg = get_config("yi-6b")
+    mesh = make_host_mesh()
+    shape = INPUT_SHAPES["train_4k"]
+    for preset in ("baseline", "seqpar", "megatron_sp"):
+        acts = S.activation_pspecs(cfg, shape, mesh, preset)
+        assert "act" in acts and "z" in acts
+    shape = INPUT_SHAPES["decode_32k"]
+    cache = jax.eval_shape(lambda: M.init_cache(cfg, 4, 64))
+    for preset in ("baseline", "serve_dp", "serve_seq"):
+        cs = S.cache_pspecs(cache, shape, mesh, preset)
+        assert jax.tree.structure(cs) == jax.tree.structure(
+            jax.tree.map(lambda _: P(), cache)
+        )
+
+
+def test_serve_preset_strips_fsdp():
+    from jax.sharding import PartitionSpec as P
+    from repro.launch import specs as S
+
+    cfg = get_config("yi-6b")
+    shapes = jax.eval_shape(lambda: M.init(jax.random.PRNGKey(0), cfg))
+    base = S.tree_pspecs(shapes)
+    serve = S.tree_pspecs(shapes, preset="serve_dp")
+    def has_data(spec):
+        return any(ax == "data" for ax in spec)
+    assert any(has_data(s) for s in jax.tree.leaves(base, is_leaf=lambda x: isinstance(x, P)))
+    assert not any(has_data(s) for s in jax.tree.leaves(serve, is_leaf=lambda x: isinstance(x, P)))
+
+
+# ---------------------------------------------------------------------------
+# gather-based MoE dispatch == one-hot dispatch (no-drop config)
+# ---------------------------------------------------------------------------
+
+def test_moe_gather_dispatch_matches_onehot(key):
+    from repro.models import moe as moe_lib
+    from repro.models.transformer import block_init
+
+    cfg = get_config("deepseek-moe-16b").reduced().replace(
+        dtype="float32", capacity_factor=4.0  # C = Tg -> no drops either path
+    )
+    bp = block_init(key, cfg, "moe")
+    x = 0.5 * jax.random.normal(key, (2, 32, cfg.d_model))
+    y1, a1 = moe_lib.moe_apply(x, bp["moe"], cfg)
+    y2, a2 = moe_lib.moe_apply_gather(x, bp["moe"], cfg)
+    np.testing.assert_allclose(y1, y2, atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(a1, a2, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# extra baselines: TiFL selection + straggler dropping
+# ---------------------------------------------------------------------------
+
+def test_extra_baselines_learn_and_are_fast_per_round():
+    from repro import optim
+    from repro.configs.resnet_cifar import RESNET56, RESNET110
+    from repro.data.partition import iid_partition
+    from repro.data.pipeline import ClientDataset, make_eval_batch
+    from repro.data.synthetic import ClassImageTask
+    from repro.fed import (DropStragglerTrainer, FedAvgTrainer, HeteroEnv,
+                           ResNetAdapter, SimClient, TiFLTrainer)
+
+    cfg = RESNET56.reduced()
+    task = ClassImageTask(n_classes=10, image_size=cfg.image_size)
+    labels = np.random.default_rng(0).integers(0, 10, 1000)
+    parts = iid_partition(labels, 5, 0)
+    clients = [SimClient(i, ClientDataset(task, labels, parts[i], 32), None)
+               for i in range(5)]
+    ev = make_eval_batch(task, 256)
+    adapter = ResNetAdapter(cfg, cost_cfg=RESNET110)
+
+    rounds = {}
+    for cls in (TiFLTrainer, DropStragglerTrainer, FedAvgTrainer):
+        tr = cls(adapter, clients, HeteroEnv(5, seed=0), __import__("repro.optim", fromlist=["adam"]).adam(1e-3), seed=0)
+        logs = tr.run(4, ev)
+        rounds[cls.__name__] = logs
+        assert logs[-1].acc >= logs[0].acc - 0.05, cls.__name__
+    # both straggler-avoidance baselines beat FedAvg's straggler time
+    assert rounds["TiFLTrainer"][-1].straggler <= rounds["FedAvgTrainer"][-1].straggler
+    assert rounds["DropStragglerTrainer"][-1].straggler <= rounds["FedAvgTrainer"][-1].straggler
+
+
+# ---------------------------------------------------------------------------
+# DTFL checkpoint / resume (server state incl. scheduler EMA history)
+# ---------------------------------------------------------------------------
+
+def test_dtfl_checkpoint_resume(tmp_path):
+    from repro import optim
+    from repro.configs.resnet_cifar import RESNET56
+    from repro.data.partition import iid_partition
+    from repro.data.pipeline import ClientDataset, make_eval_batch
+    from repro.data.synthetic import ClassImageTask
+    from repro.fed import DTFLTrainer, HeteroEnv, ResNetAdapter, SimClient
+
+    cfg = RESNET56.reduced()
+    task = ClassImageTask(n_classes=10, image_size=cfg.image_size)
+    labels = np.random.default_rng(0).integers(0, 10, 600)
+    parts = iid_partition(labels, 3, 0)
+    clients = [SimClient(i, ClientDataset(task, labels, parts[i], 32), None)
+               for i in range(3)]
+    ev = make_eval_batch(task, 128)
+    adapter = ResNetAdapter(cfg, cost_cfg=RESNET56)
+
+    path = str(tmp_path / "dtfl.npz")
+    tr = DTFLTrainer(adapter, clients, HeteroEnv(3, seed=0), __import__("repro.optim", fromlist=["adam"]).adam(1e-3), seed=0)
+    tr.run(3, ev, checkpoint_path=path, checkpoint_every=2)
+
+    tr2 = DTFLTrainer(adapter, clients, HeteroEnv(3, seed=0), __import__("repro.optim", fromlist=["adam"]).adam(1e-3), seed=1)
+    tr2.restore(path)
+    assert jax.tree.all(jax.tree.map(
+        lambda a, b: np.allclose(np.asarray(a), np.asarray(b)), tr.params, tr2.params))
+    # scheduler observations restored
+    assert [c.tier for c in tr.sched.clients] == [c.tier for c in tr2.sched.clients]
+    for c1, c2 in zip(tr.sched.clients, tr2.sched.clients):
+        assert set(c1.ema) == set(c2.ema)
+        for t in c1.ema:
+            assert abs(c1.ema[t].value - c2.ema[t].value) < 1e-9
+    # and training continues from the restored state
+    logs = tr2.run(1, ev)
+    assert np.isfinite(logs[-1].acc)
+
+
+# ---------------------------------------------------------------------------
+# dry-run integration (subprocess: needs its own XLA device-count env)
+# ---------------------------------------------------------------------------
+
+def test_dryrun_subprocess_single_combo():
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "whisper-base",
+         "--shape", "long_500k", "--no-save"],
+        capture_output=True, text=True, timeout=400, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert "lowered + compiled OK" in out.stdout, out.stdout + out.stderr

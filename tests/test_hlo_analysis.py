@@ -1,0 +1,67 @@
+"""The roofline extractor: trip-count awareness, collective accounting."""
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_analysis as H
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_dot_flops_counted():
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    txt = _compile(lambda x, w: x @ w, x, w)
+    a = H.analyze(txt)
+    assert a["flops"] == pytest.approx(2 * 64 * 128 * 256, rel=0.01)
+
+
+@pytest.mark.parametrize("L", [2, 4, 8])
+def test_scan_trip_count_scaling(L):
+    w = jax.ShapeDtypeStruct((L, 128, 128), jnp.float32)
+    x = jax.ShapeDtypeStruct((32, 128), jnp.float32)
+
+    def f(w, x):
+        def body(x, wl):
+            return jnp.tanh(x @ wl), None
+        return jax.lax.scan(body, x, w)[0].sum()
+
+    a = H.analyze(_compile(f, w, x))
+    assert a["flops"] == pytest.approx(L * 2 * 32 * 128 * 128, rel=0.05)
+
+
+def test_flat_cost_analysis_undercounts_but_extractor_does_not():
+    """Documents the while-body-once behaviour the extractor exists to fix."""
+    def f(w, x):
+        def body(x, wl):
+            return jnp.tanh(x @ wl), None
+        return jax.lax.scan(body, x, w)[0].sum()
+
+    w8 = jax.ShapeDtypeStruct((8, 64, 64), jnp.float32)
+    w2 = jax.ShapeDtypeStruct((2, 64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((16, 64), jnp.float32)
+    c8 = jax.jit(f).lower(w8, x).compile()
+    c2 = jax.jit(f).lower(w2, x).compile()
+    assert c8.cost_analysis()["flops"] == c2.cost_analysis()["flops"]  # the bug
+    a8 = H.analyze(c8.as_text())
+    a2 = H.analyze(c2.as_text())
+    assert a8["flops"] == pytest.approx(4 * a2["flops"], rel=0.05)     # the fix
+
+
+def test_shape_bytes():
+    assert H._shape_bytes("f32[2,3]{1,0}") == 24
+    assert H._shape_bytes("bf16[128]") == 256
+    assert H._shape_bytes("(f32[2], s32[4])") == 24
+    assert H._shape_bytes("pred[]") == 1
+
+
+def test_roofline_terms_dominance():
+    t = H.roofline_terms({"flops": 197e12, "bytes": 1.0, "collective_bytes_total": 1.0})
+    assert t["dominant"] == "compute"
+    t = H.roofline_terms({"flops": 1.0, "bytes": 819e9 * 5, "collective_bytes_total": 1.0})
+    assert t["dominant"] == "memory"

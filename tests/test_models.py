@@ -1,0 +1,131 @@
+"""Per-arch smoke tests (reduced configs, one forward/train step, no NaNs)
++ decode-vs-forward consistency."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import optim
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.core import local_loss
+from repro.models import model as M
+
+
+def make_batch(cfg, key, B=2, S=16):
+    ks = jax.random.split(key, 2)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab),
+        "labels": jax.random.randint(ks[1], (B, S), 0, cfg.vocab),
+    }
+    if cfg.frontend != "none":
+        batch["frontend"] = 0.1 * jax.random.normal(
+            key, (B, cfg.n_frontend_tokens, cfg.d_frontend or cfg.d_model)
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_forward_smoke(arch, key):
+    cfg = get_config(arch).reduced()
+    params = M.init(key, cfg)
+    batch = make_batch(cfg, key)
+    logits, aux = M.forward(params, cfg, batch)
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all()), arch
+    assert bool(jnp.isfinite(aux)), arch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_train_step_smoke(arch, key):
+    """One full train step on the reduced config: finite loss, params move."""
+    cfg = get_config(arch).reduced()
+    params = M.init(key, cfg)
+    opt = optim.adam(1e-3)
+    step = jax.jit(local_loss.make_full_train_step(cfg, opt))
+    batch = make_batch(cfg, key)
+    p2, _, loss = step(params, opt.init(params), batch)
+    assert bool(jnp.isfinite(loss)), arch
+    moved = jax.tree.map(lambda a, b: not jnp.array_equal(a, b), params, p2)
+    assert any(jax.tree.leaves(moved)), arch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_dtfl_step_smoke(arch, key):
+    cfg = get_config(arch).reduced().replace(tie_embeddings=False, n_modules=3)
+    params = M.init(key, cfg)
+    opt = optim.adam(1e-3)
+    state = local_loss.init_tier_state(key, cfg, params, 1, opt)
+    step = jax.jit(local_loss.make_dtfl_train_step(cfg, opt))
+    batch = make_batch(cfg, key)
+    state, met = step(state, batch)
+    assert bool(jnp.isfinite(met.client_loss)) and bool(jnp.isfinite(met.server_loss))
+
+
+def _fill_cross_cache(cfg, params, batch, cache):
+    from repro.models.layers import cdtype
+
+    enc = M.encode(params, cfg, batch)
+    dt = cdtype(cfg)
+    hd = cfg.resolved_head_dim
+    B = enc.shape[0]
+    xk = jnp.stack([(enc.astype(dt) @ params["blocks"]["xattn"]["wk"][i].astype(dt))
+                    .reshape(B, -1, cfg.n_kv_heads, hd) for i in range(cfg.n_layers)])
+    xv = jnp.stack([(enc.astype(dt) @ params["blocks"]["xattn"]["wv"][i].astype(dt))
+                    .reshape(B, -1, cfg.n_kv_heads, hd) for i in range(cfg.n_layers)])
+    cache["layers"]["xk"], cache["layers"]["xv"] = xk, xv
+    return cache
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_decode_matches_forward(arch, key):
+    cfg = get_config(arch).reduced().replace(dtype="float32")
+    if cfg.n_experts:
+        # pin capacity so no token is ever dropped in either path
+        cfg = cfg.replace(capacity_factor=float(cfg.n_experts))
+    params = M.init(key, cfg)
+    B, S = 2, 16
+    batch = make_batch(cfg, key, B, S)
+    logits, _ = M.forward(params, cfg, batch)
+    cache = M.init_cache(cfg, B, S)
+    if cfg.family == "encdec":
+        cache = _fill_cross_cache(cfg, params, batch, cache)
+    step = jax.jit(lambda p, t, c: M.decode_step(p, cfg, t, c))
+    outs = []
+    for t in range(S):
+        lg, cache = step(params, batch["tokens"][:, t], cache)
+        outs.append(lg)
+    dec = jnp.stack(outs, 1)
+    if cfg.family == "vlm":
+        pytest.skip("vlm decode has no frontend fusion (prefill-only path)")
+    assert jnp.allclose(dec, logits, atol=2e-4), float(jnp.abs(dec - logits).max())
+
+
+def test_sliding_window_decode_ring_buffer(key):
+    """Ring-buffer decode == full-cache decode restricted to the window."""
+    cfg = get_config("hymba-1.5b").reduced().replace(dtype="float32", window=8)
+    params = M.init(key, cfg)
+    B, S = 2, 24
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    # windowed forward (train path applies cfg.window)
+    logits, _ = M.forward(params, cfg, {"tokens": toks})
+    cache = M.init_cache(cfg, B, S)  # W = min(S, window) = 8 ring
+    assert cache["layers"]["k"].shape[2] == 8
+    step = jax.jit(lambda p, t, c: M.decode_step(p, cfg, t, c))
+    outs = []
+    for t in range(S):
+        lg, cache = step(params, toks[:, t], cache)
+        outs.append(lg)
+    dec = jnp.stack(outs, 1)
+    assert jnp.allclose(dec, logits, atol=2e-4), float(jnp.abs(dec - logits).max())
+
+
+def test_param_count_analytic_matches_init(key):
+    for arch in ("yi-6b", "deepseek-moe-16b", "xlstm-350m"):
+        cfg = get_config(arch).reduced()
+        params = M.init(key, cfg)
+        real = sum(a.size for a in jax.tree.leaves(params) if a.dtype != bool)
+        assert M.count_params_analytic(cfg) == real, arch
+
+
+def test_moe_active_params_less_than_total():
+    cfg = get_config("deepseek-moe-16b")
+    assert M.count_params_analytic(cfg, active_only=True) < M.count_params_analytic(cfg)

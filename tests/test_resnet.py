@@ -1,0 +1,51 @@
+"""Paper-native ResNet path: module splits, aux heads, Table-10 channels."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.resnet_cifar import RESNET56, RESNET110, get_resnet
+from repro.models import resnet as R
+
+
+@pytest.mark.parametrize("cfg", [RESNET56.reduced(), RESNET56, RESNET110])
+def test_forward_and_splits(cfg, key):
+    p = R.init(key, cfg)
+    x = jax.random.normal(key, (2, cfg.image_size, cfg.image_size, 3))
+    want = R.forward(p, cfg, x)
+    assert want.shape == (2, cfg.n_classes)
+    for tier in range(1, cfg.n_modules):
+        c, s = R.split_params(p, cfg, tier)
+        z = R.client_forward(c, cfg, x)
+        got = R.server_forward(s, cfg, z, tier)
+        np.testing.assert_allclose(want, got, atol=1e-4)
+        aux = R.aux_apply(R.aux_init(key, cfg, tier), z)
+        assert aux.shape == (2, cfg.n_classes)
+
+
+def test_block_plan_56_110_depths():
+    # ResNet-6n+2 bottleneck: 56 -> n=6 per stage; 110 -> n=12
+    assert len(R._block_plan(RESNET56)) == 18
+    assert len(R._block_plan(RESNET110)) == 36
+
+
+def test_table10_aux_channels():
+    """Aux fc input widths per tier must follow Table 10 (16,64,64,128,128,256,256
+    for the paper's width-16 stacks)."""
+    w = RESNET56.width
+    chans = [R.aux_channels(RESNET56, t) for t in range(1, 8)]
+    assert chans == [w, 4 * w, 4 * w, 8 * w, 8 * w, 16 * w, 16 * w]
+
+
+def test_merge_roundtrip(key):
+    cfg = RESNET56.reduced()
+    p = R.init(key, cfg)
+    c, s = R.split_params(p, cfg, 2)
+    m = R.merge_params(c, s)
+    assert jax.tree.all(jax.tree.map(jnp.array_equal, p, m))
+
+
+def test_module_boundaries_cover_all_blocks():
+    for cfg in (RESNET56, RESNET110):
+        assert R.n_blocks_in_modules(cfg, 7) == cfg.n_blocks
+        assert R.n_blocks_in_modules(cfg, 1) == 0  # md1 is the stem only

@@ -1,0 +1,137 @@
+"""Optimizers, data pipeline, checkpointing, privacy substrates."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import checkpoint as ckpt
+from repro import optim
+from repro.data.partition import dirichlet_partition, iid_partition, label_histogram
+from repro.data.pipeline import ClientDataset, make_eval_batch
+from repro.data.synthetic import DATASETS, ClassImageTask, SeqTask
+from repro.privacy import dcor, patch_shuffle
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("opt", [optim.sgd(0.1), optim.sgd(0.05, momentum=0.9),
+                                 optim.adam(0.05), optim.yogi(0.05)])
+def test_optimizer_minimizes_quadratic(opt):
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state = opt.update(params, grads, state)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_set_lr():
+    opt = optim.adam(1e-3)
+    s = opt.init({"w": jnp.zeros(2)})
+    s = optim.set_lr(s, 5e-4)
+    assert optim.get_lr(s) == pytest.approx(5e-4)
+
+
+def test_plateau_schedule():
+    sched = optim.PlateauSchedule(factor=0.9, patience=2)
+    lr = 1.0
+    lr = sched.step(0.5, lr)   # improves
+    lr = sched.step(0.5, lr)   # stall 1
+    lr = sched.step(0.5, lr)   # stall 2 -> cut
+    assert lr == pytest.approx(0.9)
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def test_partitions_cover_and_disjoint():
+    labels = np.random.default_rng(0).integers(0, 10, 1000)
+    for parts in (iid_partition(labels, 7), dirichlet_partition(labels, 7, 0.5)):
+        allidx = np.concatenate(parts)
+        assert len(allidx) == 1000
+        assert len(np.unique(allidx)) == 1000
+
+
+def test_dirichlet_skew_exceeds_iid():
+    labels = np.random.default_rng(0).integers(0, 10, 5000)
+    h_iid = label_histogram(labels, iid_partition(labels, 10))
+    h_dir = label_histogram(labels, dirichlet_partition(labels, 10, 0.5))
+    cv = lambda h: float(np.std(h, 0).mean() / (np.mean(h) + 1e-9))
+    assert cv(h_dir) > 2 * cv(h_iid)
+
+
+def test_pipeline_deterministic():
+    task = DATASETS["cifar10"]
+    labels = np.random.default_rng(0).integers(0, 10, 200)
+    ds = ClientDataset(task, labels, np.arange(200), 32, seed=5)
+    b1 = list(ds.epoch(3))
+    b2 = list(ds.epoch(3))
+    assert all(np.array_equal(x["images"], y["images"]) for x, y in zip(b1, b2))
+    assert ds.n_batches == len(b1)
+
+
+def test_seqtask_learnable_structure():
+    t = SeqTask(vocab=50)
+    s = t.stream(1000, seed=0)
+    # >=80% of transitions follow the deterministic rule
+    a = t.__class__
+    s2 = t.stream(1000, seed=0)
+    assert np.array_equal(s, s2)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint (property-based roundtrip)
+# ---------------------------------------------------------------------------
+
+leaf = st.sampled_from([np.float32, np.int32]).flatmap(
+    lambda d: st.integers(0, 3).map(
+        lambda nd: np.arange(int(np.prod([2] * nd)), dtype=d).reshape([2] * nd)
+    )
+)
+trees = st.recursive(
+    leaf,
+    lambda children: st.one_of(
+        st.dictionaries(st.sampled_from(list("abcde")), children, min_size=1, max_size=3),
+        st.lists(children, min_size=1, max_size=3),
+        st.tuples(children, children),
+    ),
+    max_leaves=8,
+)
+
+
+@given(tree=trees)
+@settings(max_examples=40, deadline=None)
+def test_checkpoint_roundtrip(tmp_path_factory, tree):
+    import tempfile, os
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "t.npz")
+        ckpt.save(path, tree)
+        back = ckpt.load(path)
+    assert jax.tree.structure(tree) == jax.tree.structure(back)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# privacy
+# ---------------------------------------------------------------------------
+
+def test_dcor_bounds(key):
+    x = jax.random.normal(key, (128, 32))
+    assert 0.0 <= float(dcor(x, x)) <= 1.0 + 1e-5
+    assert float(dcor(x, x)) > 0.99      # self-correlation ~1
+    z = jax.random.normal(jax.random.PRNGKey(9), (128, 8))
+    assert float(dcor(x, z)) < float(dcor(x, x))
+
+
+@given(n=st.integers(2, 16), seed=st.integers(0, 100))
+@settings(max_examples=30, deadline=None)
+def test_patch_shuffle_preserves_multiset(n, seed):
+    z = jnp.arange(4 * 32.0).reshape(4, 32)
+    out = patch_shuffle(jax.random.PRNGKey(seed), z, n_patches=n)
+    np.testing.assert_allclose(np.sort(np.asarray(out), axis=1),
+                               np.sort(np.asarray(z), axis=1))

@@ -1,0 +1,88 @@
+"""End-to-end system behaviour: full federated runs on the paper's CNN path
+and the transformer path, plus the headline DTFL-vs-FedAvg time claim."""
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.configs import get_config
+from repro.configs.resnet_cifar import RESNET56
+from repro.data.partition import dirichlet_partition
+from repro.data.pipeline import ClientDataset, make_eval_batch
+from repro.data.synthetic import ClassImageTask
+from repro.fed import (DTFLTrainer, FedAvgTrainer, HeteroEnv, ResNetAdapter,
+                       SimClient, TransformerAdapter, TRAINERS)
+
+
+@pytest.fixture(scope="module")
+def image_setup():
+    cfg = RESNET56.reduced()
+    task = ClassImageTask(n_classes=10, image_size=cfg.image_size)
+    labels = np.random.default_rng(0).integers(0, 10, 1500)
+    parts = dirichlet_partition(labels, 5, 0.5, seed=1)
+    clients = [SimClient(i, ClientDataset(task, labels, parts[i], 32), None)
+               for i in range(5)]
+    return cfg, clients, make_eval_batch(task, 256)
+
+
+def test_dtfl_learns(image_setup):
+    cfg, clients, ev = image_setup
+    adapter = ResNetAdapter(cfg, cost_cfg=RESNET56)
+    tr = DTFLTrainer(adapter, clients, HeteroEnv(5, seed=0), optim.adam(1e-3), seed=0)
+    logs = tr.run(6, ev)
+    assert logs[-1].acc > logs[0].acc
+    assert logs[-1].acc > 0.4
+    assert logs[-1].clock > 0
+
+
+@pytest.mark.parametrize("method", ["fedavg", "fedyogi", "splitfed", "fedgkt"])
+def test_baselines_learn(image_setup, method):
+    cfg, clients, ev = image_setup
+    adapter = ResNetAdapter(cfg, cost_cfg=RESNET56)
+    lr = 5e-3 if method == "fedyogi" else 1e-3
+    tr = TRAINERS[method](adapter, clients, HeteroEnv(5, seed=0), optim.adam(lr), seed=0)
+    logs = tr.run(5, ev)
+    assert logs[-1].acc > logs[0].acc, method
+
+
+def test_dtfl_round_time_beats_fedavg(image_setup):
+    """The paper's headline: on a heterogeneous pool, DTFL's straggler-bounded
+    time is well below FedAvg's (full model on the weakest client). Priced on
+    the FULL ResNet-110 cost table — the paper's large-model regime (on small
+    models the offload/comm trade is a wash, consistent with the paper's
+    framing that DTFL targets LARGE models)."""
+    from repro.configs.resnet_cifar import RESNET110
+
+    cfg, clients, ev = image_setup
+    adapter = ResNetAdapter(cfg, cost_cfg=RESNET110)
+    dtfl = DTFLTrainer(adapter, clients, HeteroEnv(5, seed=0), optim.adam(1e-3), seed=0)
+    fedavg = FedAvgTrainer(adapter, clients, HeteroEnv(5, seed=0), optim.adam(1e-3), seed=0)
+    l1 = dtfl.run(4, ev)
+    l2 = fedavg.run(4, ev)
+    assert l1[-1].clock < l2[-1].clock
+    assert l1[-1].straggler < l2[-1].straggler
+
+
+def test_dtfl_transformer_path():
+    from repro.launch.train import SeqClientDataset
+    from repro.data.synthetic import SeqTask
+
+    cfg = get_config("smollm-360m").reduced()
+    adapter = TransformerAdapter(cfg, seq_len=32, cost_cfg=get_config("smollm-360m"))
+    task = SeqTask(vocab=adapter.cfg.vocab)
+    clients = [SimClient(i, SeqClientDataset(task, 2, 4, 32, i), None) for i in range(3)]
+    ev = next(task.batches(8, 32, 1, seed=99))
+    tr = DTFLTrainer(adapter, clients, HeteroEnv(3, seed=0), optim.adam(2e-3), seed=0)
+    logs = tr.run(5, ev)
+    assert logs[-1].acc >= logs[0].acc
+
+
+def test_dynamic_scheduler_beats_static_worst_tier(image_setup):
+    cfg, clients, ev = image_setup
+    adapter = ResNetAdapter(cfg, cost_cfg=RESNET56)
+    dyn = DTFLTrainer(adapter, clients, HeteroEnv(5, seed=0), optim.adam(1e-3),
+                      scheduler="dynamic", seed=0)
+    static_hi = DTFLTrainer(adapter, clients, HeteroEnv(5, seed=0), optim.adam(1e-3),
+                            scheduler=adapter.n_tiers - 1, seed=0)
+    l_dyn = dyn.run(4, ev)
+    l_hi = static_hi.run(4, ev)
+    assert l_dyn[-1].straggler <= l_hi[-1].straggler * 1.05

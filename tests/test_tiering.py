@@ -1,0 +1,51 @@
+"""Tier splitting: boundaries, lossless split/merge, cross-arch."""
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.core import tiering
+from repro.models import model as M
+
+
+@given(n_layers=st.integers(2, 200), n_modules=st.integers(2, 12))
+@settings(max_examples=200, deadline=None)
+def test_boundaries_properties(n_layers, n_modules):
+    b = tiering.module_boundaries(n_layers, n_modules)
+    assert len(b) == n_modules - 1
+    assert all(1 <= x <= n_layers - 1 for x in b), b       # both halves non-empty
+    assert all(x <= y for x, y in zip(b, b[1:])), b        # monotone
+    assert b[-1] >= n_layers - n_layers // (n_modules - 1) - 1
+
+
+def test_paper_boundaries_resnet_style():
+    # 8 modules over 32 layers: tier m keeps ~m/7 of the blocks
+    b = tiering.module_boundaries(32, 8)
+    assert b[0] < b[3] < b[-1]
+    assert b[-1] == 31  # server always keeps at least one block
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_split_merge_roundtrip(arch, key):
+    cfg = get_config(arch).reduced().replace(tie_embeddings=False, n_modules=3)
+    params = M.init(key, cfg)
+    for tier in range(1, tiering.n_tiers(cfg) + 1):
+        c, s = tiering.split_params(params, cfg, tier)
+        m = tiering.merge_params(c, s)
+        assert jax.tree.all(jax.tree.map(jnp.array_equal, params, m)), (arch, tier)
+
+
+def test_split_forward_equivalence(key):
+    """client_forward + server_forward == forward at every tier."""
+    cfg = get_config("yi-6b").reduced().replace(
+        tie_embeddings=False, dtype="float32", n_modules=3
+    )
+    params = M.init(key, cfg)
+    batch = {"tokens": jax.random.randint(key, (2, 16), 0, cfg.vocab)}
+    want, _ = M.forward(params, cfg, batch)
+    for tier in range(1, tiering.n_tiers(cfg) + 1):
+        c, s = tiering.split_params(params, cfg, tier)
+        z, _ = M.client_forward(c, cfg, batch)
+        got, _ = M.server_forward(s, cfg, z)
+        assert jnp.allclose(want, got, atol=1e-5), tier
