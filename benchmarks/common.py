@@ -4,6 +4,13 @@ Gradient dynamics run on REDUCED models (CPU container); all reported times
 come from the analytic time model priced on the FULL ResNet-56/110 (or full
 transformer) cost tables — the paper's own experiments simulate resource
 profiles the same way (DESIGN.md §2/§8).
+
+Output convention: every benchmark module's ``main(emit_fn)`` prints CSV
+rows ``<table>,<keys...>,<values...>`` (one schema per module, documented in
+its docstring) so ``benchmarks/run.py`` output is machine-parseable as-is.
+``run_method`` routes DTFL and the full-model baselines through the cohort
+engine by default (``cohort=False`` selects the sequential debug path);
+FedGKT always runs its sequential two-phase KD protocol.
 """
 from __future__ import annotations
 
@@ -32,11 +39,12 @@ def image_setup(n_clients=10, samples=2000, batch=32, iid=True, n_classes=10, se
 
 def run_method(method, cfg, clients, ev, *, cost_model="resnet-110", rounds=8,
                target=None, scheduler="dynamic", participation=1.0, seed=0,
-               switch_every=50, dcor_alpha=0.0, lr=1e-3):
+               switch_every=50, dcor_alpha=0.0, lr=1e-3, cohort=True):
     cost_cfg = get_resnet(cost_model)
     adapter = ResNetAdapter(cfg, cost_cfg=cost_cfg, dcor_alpha=dcor_alpha)
     env = HeteroEnv(len(clients), switch_every=switch_every, seed=seed)
     kw = {"scheduler": scheduler} if method == "dtfl" else {}
+    kw["cohort"] = cohort
     tr = TRAINERS[method](adapter, clients, env, optim.adam(lr), seed=seed, **kw)
     logs = tr.run(rounds, ev, target_acc=target, participation=participation)
     return logs

@@ -1,5 +1,9 @@
 """Paper Figure 3: more tiers -> lower total training time (more scheduling
-freedom), for both profile cases, profiles switching every 20 rounds."""
+freedom), for both profile cases, profiles switching every 20 rounds.
+
+CSV rows: ``fig3,<case>,<n_tiers>,<total_time_s>`` and
+``fig3,<case>,7_vs_1_speedup,<x>``
+"""
 from __future__ import annotations
 
 import numpy as np

@@ -3,6 +3,10 @@
 Prints the per-(arch x shape) three-term roofline, the dominant bottleneck,
 MODEL_FLOPS / HLO_FLOPs usefulness ratio, and a one-line lever suggestion.
 Populated by ``python -m repro.launch.dryrun --all``.
+
+CSV rows: ``roofline,<arch>,<shape>,<mesh>,<preset>,<compute_ms>,
+<memory_ms>,<collective_ms>,<dominant>,<useful_flops_ratio>,<temp_gib>``
+(or ``roofline,NO_DATA,...`` when no dry-run artifacts exist).
 """
 from __future__ import annotations
 

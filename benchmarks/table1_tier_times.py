@@ -10,6 +10,10 @@ full ResNet-110 cost table.
 Claims reproduced: (a) time varies non-trivially across tiers and the best
 static tier depends on the resource case; (b) FedAvg is no better than the
 best static tier — the motivation for DYNAMIC tiering.
+
+CSV rows (via benchmarks/common.py conventions):
+  table1,<case>,<tier|fedavg>,<rounds>,<compute_s>,<comm_s>,<total_s>
+  table1,<case>,best_tier,<tier>,beats_fedavg,<bool>,
 """
 from __future__ import annotations
 

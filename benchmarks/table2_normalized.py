@@ -3,6 +3,8 @@
 For a pool of random CPU capacities, the per-tier client-side time normalized
 by tier 1 must be the same for every client (std ~ 0) — the invariance the
 dynamic scheduler's extrapolation relies on (Algorithm 1 lines 24-29).
+
+CSV rows: ``table2,<tier>,<normalized_time_mean>,<normalized_time_std>``
 """
 from __future__ import annotations
 

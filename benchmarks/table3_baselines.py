@@ -3,7 +3,14 @@ FedGKT, IID and non-IID.
 
 Gradient dynamics on the reduced ResNet; simulated clocks priced on the FULL
 ResNet-110 cost table (paper's main config). Claim reproduced: DTFL reaches
-the target in far less simulated time than every baseline.
+the target in far less simulated time than every baseline. DTFL and the
+full-model baselines (FedAvg/FedYogi/SplitFed/TiFL/drop30) run on the shared
+cohort engine, so the comparison stays apples-to-apples at scale; FedGKT
+keeps its sequential two-phase KD protocol (per-batch teacher state).
+
+CSV rows:
+  table3,<iid|noniid>,<method>,<sim_clock_s>,<rounds>,<acc>,<reached|budget>
+  table3,<iid|noniid>,dtfl_vs_fedavg_speedup,<x>,,,
 """
 from __future__ import annotations
 

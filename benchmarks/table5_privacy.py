@@ -3,6 +3,8 @@
 
 Claim reproduced: small alpha costs little accuracy; accuracy degrades as
 alpha grows; patch shuffling has minimal impact.
+
+CSV rows: ``table5,<dcor_<alpha>|patch_shuffle|alpha_trend_ok>,<acc|bool>``
 """
 from __future__ import annotations
 

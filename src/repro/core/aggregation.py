@@ -28,6 +28,31 @@ def uniform_average(trees: list[Params]) -> Params:
     return weighted_average(trees, [1.0] * len(trees))
 
 
+@jax.jit
+def _wavg_cohorts(stacked_trees: list, ws: list):
+    total = sum(w.sum() for w in ws)
+
+    def partial(w):
+        return lambda x: jnp.tensordot(w, x.astype(jnp.float32), axes=1)
+
+    acc = jax.tree.map(partial(ws[0]), stacked_trees[0])
+    for tree, w in zip(stacked_trees[1:], ws[1:]):
+        acc = jax.tree.map(lambda a, x, p=partial(w): a + p(x), acc, tree)
+    return jax.tree.map(
+        lambda a, x: (a / total).astype(x.dtype), acc, stacked_trees[0]
+    )
+
+
+def weighted_average_cohorts(stacked_trees: list[Params], weights: list) -> Params:
+    """Weighted average across several stacked pytrees (one per cohort).
+
+    Every tree carries a leading client axis; weights are per-client within
+    each cohort and normalized over the union of all cohorts. Runs as one
+    jitted program (cached per pytree structure/shapes)."""
+    ws = [jnp.asarray(w, jnp.float32) for w in weights]
+    return _wavg_cohorts(stacked_trees, ws)
+
+
 def aggregate_dtfl_round(cfg, tier_states: list[tuple[int, Params, Params]],
                          weights: list[float]) -> Params:
     """tier_states: [(tier, client_params, server_params)] per client."""

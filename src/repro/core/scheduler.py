@@ -99,37 +99,61 @@ class DynamicTierScheduler:
         st.last_obs_tier = tier
         st.tier = tier
 
+    def observe_cohort(self, ks, tiers, total_client_times, nus, n_batches) -> None:
+        """Vectorized :meth:`observe` for a whole round's participants.
+
+        The compute-time recovery (line 22) is done as one array expression;
+        per-client EMA state updates follow. Results are identical to calling
+        ``observe`` per client."""
+        tiers = np.asarray(tiers, int)
+        nb = np.asarray(n_batches)
+        comm = self.profile.d_size[tiers] * nb / np.asarray(nus, float)
+        compute = np.maximum(np.asarray(total_client_times, float) - comm, 1e-9)
+        for k, tier, c, nu, n in zip(ks, tiers, compute, nus, nb):
+            st = self.clients[k]
+            st.nu = float(nu)
+            st.n_batches = int(n)
+            st.ema.setdefault(int(tier), EMA()).update(float(c))
+            st.last_obs_tier = int(tier)
+            st.tier = int(tier)
+
     # ------------------------------------------------------------------
-    # Algorithm 1, lines 24-29: per-tier estimates for one client
+    # Algorithm 1, lines 24-29: per-tier estimates
     # ------------------------------------------------------------------
+    def estimate_matrix(self, ks: list[int]) -> np.ndarray:
+        """T_hat_k(m) for every k in ``ks`` and every m, as a (K, M) matrix
+        (Eq. 5 composition, vectorized)."""
+        prof = self.profile
+        nb = np.array([self.clients[k].n_batches for k in ks], float)
+        nu = np.array([self.clients[k].nu for k in ks], float)
+        t_com = prof.d_size[None, :] * nb[:, None] / nu[:, None]              # (K, M)
+        t_srv = prof.t_server_ref[None, :] * nb[:, None]                      # (K, M)
+        t_cli = prof.t_client_ref[None, :] * nb[:, None]                      # no-obs fallback
+        for i, k in enumerate(ks):
+            st = self.clients[k]
+            if st.last_obs_tier is not None:
+                m0 = st.last_obs_tier
+                base = st.ema[m0].value                                       # EMA'd round time
+                t_cli[i] = prof.t_client_ref / prof.t_client_ref[m0] * base
+        return np.maximum(t_cli + t_com, t_srv + t_com)
+
     def estimate(self, k: int) -> np.ndarray:
         """T_hat_k(m) for all m (Eq. 5 composition)."""
-        st = self.clients[k]
-        M = self.M
-        t_com = self.profile.d_size * st.n_batches / st.nu                    # (M,)
-        t_srv = self.profile.t_server_ref * st.n_batches                      # (M,)
-        if st.last_obs_tier is None:
-            # no observation yet: fall back to the reference profile
-            t_cli = self.profile.t_client_ref * st.n_batches
-        else:
-            m0 = st.last_obs_tier
-            base = st.ema[m0].value                                           # EMA'd round time
-            ratios = self.profile.t_client_ref / self.profile.t_client_ref[m0]
-            t_cli = ratios * base
-        return np.maximum(t_cli + t_com, t_srv + t_com)
+        return self.estimate_matrix([k])[0]
 
     # ------------------------------------------------------------------
     # Algorithm 1, lines 31-33: assignment
     # ------------------------------------------------------------------
     def schedule(self, participants: list[int] | None = None) -> dict[int, int]:
-        ks = list(range(len(self.clients))) if participants is None else participants
+        ks = list(range(len(self.clients))) if participants is None else list(participants)
         sel = np.array(self.allowed)
-        est = {k: self.estimate(k) for k in ks}
-        t_max = max(est[k][sel].min() for k in ks)                            # line 31
+        est = self.estimate_matrix(ks)[:, sel]                                # (K, |sel|)
+        t_max = est.min(axis=1).max()                                         # line 31
+        feasible = est <= t_max + 1e-12
         assign = {}
-        for k in ks:                                                          # line 33
-            ok = sel[est[k][sel] <= t_max + 1e-12]
-            m = int(ok.max()) if len(ok) else int(sel[est[k][sel].argmin()])
+        for i, k in enumerate(ks):                                            # line 33
+            ok = np.flatnonzero(feasible[i])
+            m = int(sel[ok.max()]) if len(ok) else int(sel[est[i].argmin()])
             assign[k] = m
             self.clients[k].tier = m
         return assign
@@ -147,6 +171,9 @@ class StaticScheduler:
         self.n = n_clients
 
     def observe(self, *a, **kw):
+        pass
+
+    def observe_cohort(self, *a, **kw):
         pass
 
     def schedule(self, participants=None) -> dict[int, int]:

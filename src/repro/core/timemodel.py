@@ -249,3 +249,32 @@ def simulate_client_times(
         "server": t_s,
         "total": max(t_c + t_com, t_s + t_com),  # Eq. (5)
     }
+
+
+def simulate_client_times_batch(
+    costs: TierCostTable,
+    tiers: np.ndarray,
+    flops: np.ndarray,
+    bytes_per_s: np.ndarray,
+    n_batches: np.ndarray,
+    *,
+    server_flops: float = SERVER_FLOPS,
+    n_sharing: int = 1,
+) -> dict:
+    """Vectorized :func:`simulate_client_times` over a round's participants.
+
+    All array arguments are per-client; returns a dict of per-client arrays
+    with the exact same formulas (so scheduler observations are identical to
+    the scalar path)."""
+    tiers = np.asarray(tiers, int)
+    nb = np.asarray(n_batches, float)
+    d = costs.z_bytes[tiers] + costs.client_param_bytes[tiers] / np.maximum(nb, 1)
+    t_c = costs.client_flops[tiers] * nb / np.asarray(flops, float)
+    t_com = d * nb / np.asarray(bytes_per_s, float)
+    t_s = costs.server_flops[tiers] * nb / (server_flops / max(n_sharing, 1))
+    return {
+        "client": t_c,
+        "comm": t_com,
+        "server": t_s,
+        "total": np.maximum(t_c + t_com, t_s + t_com),
+    }

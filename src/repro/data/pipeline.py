@@ -11,6 +11,25 @@ import numpy as np
 
 from repro.data.synthetic import ClassImageTask
 
+# Deterministic per-round epoch seeding shared by the sequential loop and the
+# cohort engine: epoch e of round r draws from seed r * ROUND_SEED_STRIDE + e,
+# so both execution paths consume bit-identical batches.
+ROUND_SEED_STRIDE = 131
+
+
+def materialize_round(dataset, r: int, local_epochs: int) -> dict:
+    """All of a client's local steps for round ``r`` as stacked arrays.
+
+    Works for any dataset exposing ``epoch(epoch_seed)``; returns a dict of
+    (n_steps, batch, ...) arrays with n_steps = local_epochs * n_batches.
+    """
+    steps = [
+        batch
+        for e in range(local_epochs)
+        for batch in dataset.epoch(r * ROUND_SEED_STRIDE + e)
+    ]
+    return {k: np.stack([s[k] for s in steps]) for k in steps[0]}
+
 
 class ClientDataset:
     def __init__(self, task: ClassImageTask, labels: np.ndarray, indices: np.ndarray,

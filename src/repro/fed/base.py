@@ -13,6 +13,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aggregation, timemodel
+from repro.data import pipeline
+from repro.fed import cohort as cohort_engine
 from repro.fed.client import HeteroEnv, SimClient
 from repro.fed.dtfl import RoundLog
 
@@ -32,13 +34,14 @@ class BaseTrainer:
 
     def __init__(self, adapter, clients: list[SimClient], env: HeteroEnv, optimizer,
                  *, seed: int = 0, local_epochs: int = 1,
-                 server_flops: float = timemodel.SERVER_FLOPS):
+                 server_flops: float = timemodel.SERVER_FLOPS, cohort: bool = True):
         self.adapter = adapter
         self.clients = clients
         self.env = env
         self.opt = optimizer
         self.local_epochs = local_epochs
         self.server_flops = server_flops
+        self.cohort = cohort
         self.key = jax.random.PRNGKey(seed)
         self.params = adapter.init_global(self._next_key())
         self.costs = adapter.tier_costs(clients[0].dataset.batch_size)
@@ -97,7 +100,50 @@ class BaseTrainer:
             self._full_step = step
         o = self.opt.init(params)
         for e in range(self.local_epochs):
-            for batch in self.clients[cid].dataset.epoch(r * 131 + e):
+            for batch in self.clients[cid].dataset.epoch(
+                r * pipeline.ROUND_SEED_STRIDE + e
+            ):
                 batch = {k: jnp.asarray(v) for k, v in batch.items()}
                 params, o, _ = self._full_step(params, o, batch)
         return params
+
+    # ------------------------------------------------------------------
+    # cohort engine path (same math as _local_full_steps, vectorized)
+    # ------------------------------------------------------------------
+    def _train_round_full(self, r: int, cids: list[int]):
+        """Full-model local training for every client in ``cids`` followed by
+        the N_k/N weighted average; returns the aggregated params.
+
+        With ``cohort=True`` the clients run as vectorized shape-bucketed
+        cohorts — one jitted program each (optimizer init + vmap+scan fused
+        on device) and a stacked aggregation; otherwise the per-client loop.
+        """
+        weigh = lambda k: len(self.clients[k].dataset)
+        if not self.cohort:
+            locals_ = [self._local_full_steps(r, k, self.params) for k in cids]
+            return aggregation.weighted_average(locals_, [weigh(k) for k in cids])
+        if not hasattr(self, "_full_cohort_program"):
+            ad, opt = self.adapter, self.opt
+
+            def step(state, batch):
+                loss, g = jax.value_and_grad(
+                    lambda q: ad.full_loss(q, batch)
+                )(state["p"])
+                p, o = opt.update(state["p"], g, state["o"])
+                return {"p": p, "o": o}, loss
+
+            @jax.jit
+            def run(params, batches, mask):
+                state = {"p": params, "o": opt.init(params)}
+                final, _ = cohort_engine.run_cohort(step, state, batches, mask)
+                return final["p"]
+
+            self._full_cohort_program = run
+        trees, ws = [], []
+        tier_of = {k: 0 for k in cids}  # untired: bucket by batch shape only
+        for co in cohort_engine.build_cohorts(
+            self.clients, cids, tier_of, r, self.local_epochs
+        ):
+            trees.append(self._full_cohort_program(self.params, co.batches, co.mask))
+            ws.append([weigh(k) for k in co.cids])
+        return aggregation.weighted_average_cohorts(trees, ws)

@@ -1,0 +1,130 @@
+"""Tier-cohort vectorized round engine.
+
+The sequential round loop dispatches O(n_clients x n_batches) jitted steps
+per round; this engine collapses each round to O(n_tiers) device programs:
+
+  1. participants are grouped into *cohorts* by (tier, per-batch sample
+     shape) — every client in a cohort trains the same client/server split
+     on identically-shaped batches;
+  2. each client's local steps (``local_epochs`` epochs of its minibatches)
+     are materialized and stacked into leading-axis arrays of shape
+     ``(n_steps, n_clients, batch, ...)``;
+  3. ragged cohorts (clients with unequal batch counts) are padded with
+     zero batches up to the cohort max and masked out: a ``(n_steps,
+     n_clients)`` boolean mask gates the state update, so padded steps are
+     identity for that client;
+  4. one jitted program per cohort runs ``jax.lax.scan`` over steps with a
+     ``jax.vmap``-ed per-client step inside, so XLA sees a single static
+     (n_steps, n_clients)-shaped computation per (tier, shape-bucket).
+
+The engine is trainer-agnostic: any per-client step function
+``step(state, batch) -> (state, out)`` over arbitrary pytrees can be lifted
+with :func:`run_cohort`. ``DTFLTrainer`` uses it for per-tier split
+training; ``BaseTrainer`` routes the full-model baselines (FedAvg, TiFL,
+SplitFed, FedYogi, DropStrag) through the same path.
+
+Recompilation note: a cohort program specializes on (n_steps, n_clients,
+batch shapes). Rounds with stable tier assignments and participation reuse
+the cached executable; a changed cohort size retraces.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import materialize_round
+
+
+@dataclass
+class Cohort:
+    """One (tier, batch-shape) group of a round's participants."""
+
+    tier: int
+    cids: list[int]                # participant ids, stacking order
+    batches: dict                  # name -> (n_steps, n_clients, batch, ...)
+    mask: np.ndarray               # (n_steps, n_clients) bool; False = padded
+
+    @property
+    def size(self) -> int:
+        return len(self.cids)
+
+
+def build_cohorts(
+    clients, cids: list[int], tier_of: dict[int, int], r: int, local_epochs: int
+) -> list[Cohort]:
+    """Group ``cids`` into cohorts and stack their round-``r`` batches.
+
+    ``tier_of`` maps cid -> tier (use a constant for untired full-model
+    training). Batches come from ``materialize_round`` so they are
+    bit-identical to what the sequential loop would consume.
+    """
+    per_client = {k: materialize_round(clients[k].dataset, r, local_epochs) for k in cids}
+    groups: dict[tuple, list[int]] = {}
+    for k in cids:
+        arrs = per_client[k]
+        shape_key = tuple(sorted((name, a.shape[1:]) for name, a in arrs.items()))
+        groups.setdefault((tier_of[k], shape_key), []).append(k)
+
+    cohorts = []
+    for (tier, _), members in groups.items():
+        steps = np.array([len(next(iter(per_client[k].values()))) for k in members])
+        s_max = int(steps.max())
+        names = per_client[members[0]].keys()
+        batches = {}
+        for name in names:
+            stacked = np.stack(
+                [_pad_steps(per_client[k][name], s_max) for k in members], axis=1
+            )  # (S, C, batch, ...)
+            batches[name] = stacked
+        mask = np.arange(s_max)[:, None] < steps[None, :]  # (S, C)
+        cohorts.append(Cohort(tier, members, batches, mask))
+    return cohorts
+
+
+def _pad_steps(a: np.ndarray, s_max: int) -> np.ndarray:
+    if len(a) == s_max:
+        return a
+    pad = np.zeros((s_max - len(a),) + a.shape[1:], a.dtype)
+    return np.concatenate([a, pad])
+
+
+# ---------------------------------------------------------------------------
+# the vectorized program
+# ---------------------------------------------------------------------------
+
+def broadcast_state(state, n: int):
+    """Replicate a single-client state pytree along a new leading axis."""
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n,) + jnp.shape(x)), state)
+
+
+def tree_select(mask: jax.Array, new, old):
+    """Per-client select: leaves have leading client axis; mask is (C,)."""
+    def sel(n, o):
+        m = mask.reshape(mask.shape + (1,) * (jnp.ndim(n) - 1))
+        return jnp.where(m, n, o)
+
+    return jax.tree.map(sel, new, old)
+
+
+def run_cohort(step_fn, state, batches, mask):
+    """Traceable core: broadcast a SINGLE client's initial ``state`` across
+    the cohort and scan ``step(state, batch) -> (state, out)`` over the
+    stacked steps with a vmapped per-client step inside. Masked (padded)
+    steps leave that client's state untouched.
+
+    Call inside a jitted per-trainer program so that state construction
+    (split, optimizer init) and post-processing (merge, weighted sums) fuse
+    into the same device program — eager dispatch is the cost the engine
+    exists to remove.
+    """
+    stacked = broadcast_state(state, mask.shape[1])
+
+    def body(s, xs):
+        batch, m = xs
+        new_s, out = jax.vmap(step_fn)(s, batch)
+        return tree_select(m, new_s, s), out
+
+    return jax.lax.scan(body, stacked, (batches, mask))

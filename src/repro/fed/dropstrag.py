@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import aggregation
 from repro.fed.base import BaseTrainer
 
 
@@ -24,9 +23,5 @@ class DropStragglerTrainer(BaseTrainer):
                  for k in participants}
         keep_n = max(1, int(np.ceil(len(participants) * (1 - self.drop_frac))))
         kept = sorted(participants, key=lambda k: times[k])[:keep_n]
-        locals_, weights = [], []
-        for k in kept:
-            locals_.append(self._local_full_steps(r, k, self.params))
-            weights.append(len(self.clients[k].dataset))
-        self.params = aggregation.weighted_average(locals_, weights)
+        self.params = self._train_round_full(r, kept)
         return max(times[k] for k in kept)

@@ -3,14 +3,18 @@
 Per round:
   1. TierScheduler assigns every participant a tier (dynamic, from observed
      times) — or a StaticScheduler for the Table-1 ablations.
-  2. Each client trains (client-side + aux) on its local data while the
-     server trains the client's server-side model on the uploaded z — both
-     inside one jitted step per tier (compiled once, cached).
+  2. Each tier's participants train as ONE vectorized cohort (fed.cohort):
+     client-side + aux training and the server-side training on the uploaded
+     z run inside a single jitted vmap+scan program per tier — O(n_tiers)
+     dispatches per round. ``cohort=False`` preserves the per-client
+     sequential loop for debugging.
   3. Simulated wall-times per client come from the analytic time model and
-     the client's ground-truth resource profile; the scheduler only observes
-     the resulting times (+ the client-reported nu), as in the paper.
+     the client's ground-truth resource profile (vectorized over the round);
+     the scheduler only observes the resulting times (+ the client-reported
+     nu), as in the paper.
   4. Halves are merged and FedAvg'd with weights N_k/N; per-tier aux heads
-     are averaged within their tier cohort.
+     start each round from the tier's shared head and are weight-averaged
+     within their tier cohort afterwards (both execution paths).
 """
 from __future__ import annotations
 
@@ -23,6 +27,8 @@ import numpy as np
 
 from repro.core import aggregation, timemodel
 from repro.core.scheduler import DynamicTierScheduler, StaticScheduler, TierProfile
+from repro.data import pipeline
+from repro.fed import cohort as cohort_engine
 from repro.fed.adapter import DTFLStepState
 from repro.fed.client import HeteroEnv, SimClient
 
@@ -48,6 +54,7 @@ class DTFLTrainer:
         seed: int = 0,
         local_epochs: int = 1,
         server_flops: float = timemodel.SERVER_FLOPS,
+        cohort: bool = True,
     ):
         self.adapter = adapter
         self.clients = clients
@@ -76,71 +83,134 @@ class DTFLTrainer:
         self.aux = {
             m: adapter.aux_init(self._next_key(), m) for m in range(adapter.n_tiers)
         }
+        self.cohort = cohort
         self._step_cache: dict[int, callable] = {}
+        self._cohort_cache: dict[int, callable] = {}
 
     # ------------------------------------------------------------------
     def _next_key(self):
         self.key, k = jax.random.split(self.key)
         return k
 
+    def _raw_step(self, tier: int):
+        """Single-client DTFL step for ``tier`` (unjitted; shared by the
+        sequential path and the vmapped cohort program)."""
+        ad, opt = self.adapter, self.opt
+
+        def step(state: DTFLStepState, batch: dict):
+            (closs, z), (cg, ag) = jax.value_and_grad(
+                lambda cp, ap: ad.client_loss(cp, ap, batch), argnums=(0, 1),
+                has_aux=True,
+            )(state.client, state.aux)
+            z = jax.lax.stop_gradient(z)
+            sloss, sg = jax.value_and_grad(
+                lambda sp: ad.server_loss(sp, z, batch, tier)
+            )(state.server)
+            c, co = opt.update(state.client, cg, state.c_opt)
+            a, ao = opt.update(state.aux, ag, state.a_opt)
+            s, so = opt.update(state.server, sg, state.s_opt)
+            return DTFLStepState(c, a, s, co, ao, so), (closs, sloss)
+
+        return step
+
     def _tier_step(self, tier: int):
         if tier not in self._step_cache:
+            self._step_cache[tier] = jax.jit(self._raw_step(tier))
+        return self._step_cache[tier]
+
+    def _cohort_program(self, tier: int):
+        """One jitted program per tier: split + optimizer init + vmapped scan
+        over the cohort's steps + merge, all fused on device (eager per-leaf
+        dispatch is exactly the overhead the engine removes)."""
+        if tier not in self._cohort_cache:
             ad, opt = self.adapter, self.opt
+            step = self._raw_step(tier)
 
             @jax.jit
-            def step(state: DTFLStepState, batch: dict):
-                (closs, z), (cg, ag) = jax.value_and_grad(
-                    lambda cp, ap: ad.client_loss(cp, ap, batch), argnums=(0, 1),
-                    has_aux=True,
-                )(state.client, state.aux)
-                z = jax.lax.stop_gradient(z)
-                sloss, sg = jax.value_and_grad(
-                    lambda sp: ad.server_loss(sp, z, batch, tier)
-                )(state.server)
-                c, co = opt.update(state.client, cg, state.c_opt)
-                a, ao = opt.update(state.aux, ag, state.a_opt)
-                s, so = opt.update(state.server, sg, state.s_opt)
-                return DTFLStepState(c, a, s, co, ao, so), (closs, sloss)
+            def run(params, aux, batches, mask):
+                cp, sp = ad.split(params, tier)
+                state = DTFLStepState(
+                    cp, aux, sp, opt.init(cp), opt.init(aux), opt.init(sp)
+                )
+                final, _ = cohort_engine.run_cohort(step, state, batches, mask)
+                merged = jax.vmap(ad.merge)(final.client, final.server)
+                return merged, final.aux
 
-            self._step_cache[tier] = step
-        return self._step_cache[tier]
+            self._cohort_cache[tier] = run
+        return self._cohort_cache[tier]
 
     # ------------------------------------------------------------------
     def train_round(self, r: int, participants: list[int]) -> tuple[float, dict[int, int]]:
         self.env.maybe_switch(r)
         assign = self.sched.schedule(participants)
-        merged, weights, times = [], [], []
+        if self.cohort:
+            self._train_round_cohort(r, participants, assign)
+        else:
+            self._train_round_sequential(r, participants, assign)
+        times = self._simulate_and_observe(participants, assign)
+        return float(times.max()), assign
+
+    def _train_round_cohort(self, r, participants, assign) -> None:
+        """O(n_tiers) device programs: one vmap+scan per (tier, shape) cohort."""
+        merged_trees, merged_ws = [], []
+        aux_by_tier: dict[int, list] = {}
+        cohorts = cohort_engine.build_cohorts(
+            self.clients, participants, assign, r, self.local_epochs
+        )
+        for co in cohorts:
+            merged, aux = self._cohort_program(co.tier)(
+                self.params, self.aux[co.tier], co.batches, co.mask
+            )
+            w = [len(self.clients[k].dataset) for k in co.cids]
+            merged_trees.append(merged)
+            merged_ws.append(w)
+            aux_by_tier.setdefault(co.tier, []).append((aux, w))
+        self.params = aggregation.weighted_average_cohorts(merged_trees, merged_ws)
+        for tier, parts in aux_by_tier.items():
+            self.aux[tier] = aggregation.weighted_average_cohorts(
+                [a for a, _ in parts], [w for _, w in parts]
+            )
+
+    def _train_round_sequential(self, r, participants, assign) -> None:
+        """Per-client loop (debug escape hatch; O(clients x batches) dispatches)."""
+        round_aux = dict(self.aux)  # cohort members share the round-start head
+        merged, weights = [], []
+        aux_by_tier: dict[int, list] = {}
         for k in participants:
             tier = assign[k]
             cl = self.clients[k]
             cp, sp = self.adapter.split(self.params, tier)
             state = DTFLStepState(
-                cp, self.aux[tier], sp,
-                self.opt.init(cp), self.opt.init(self.aux[tier]), self.opt.init(sp),
+                cp, round_aux[tier], sp,
+                self.opt.init(cp), self.opt.init(round_aux[tier]), self.opt.init(sp),
             )
             step = self._tier_step(tier)
             for e in range(self.local_epochs):
-                for batch in cl.dataset.epoch(r * 131 + e):
+                for batch in cl.dataset.epoch(r * pipeline.ROUND_SEED_STRIDE + e):
                     batch = {k2: jnp.asarray(v) for k2, v in batch.items()}
                     state, _ = step(state, batch)
-            self.aux[tier] = state.aux
+            aux_by_tier.setdefault(tier, []).append((state.aux, len(cl.dataset)))
             merged.append(self.adapter.merge(state.client, state.server))
             weights.append(len(cl.dataset))
-            t = timemodel.simulate_client_times(
-                self.costs, tier, self.env.profile(k), cl.n_batches,
-                server_flops=self.server_flops, n_sharing=len(participants),
-            )
-            times.append(t["total"])
-            self.sched.observe(
-                k, tier=tier, total_client_time=t["client"] + t["comm"],
-                nu=self.env.profile(k).bytes_per_s, n_batches=cl.n_batches,
-            )
         self.params = aggregation.weighted_average(merged, weights)
-        # aggregate aux heads within tier cohorts
-        by_tier: dict[int, list[int]] = {}
-        for k in participants:
-            by_tier.setdefault(assign[k], []).append(k)
-        return max(times), assign
+        for tier, parts in aux_by_tier.items():
+            self.aux[tier] = aggregation.weighted_average(
+                [a for a, _ in parts], [w for _, w in parts]
+            )
+
+    def _simulate_and_observe(self, participants, assign) -> np.ndarray:
+        """Vectorized ground-truth times + scheduler observations; identical
+        values to the scalar per-client path."""
+        tiers = np.array([assign[k] for k in participants])
+        profs = [self.env.profile(k) for k in participants]
+        bps = np.array([p.bytes_per_s for p in profs])
+        nb = np.array([self.clients[k].n_batches for k in participants])
+        t = timemodel.simulate_client_times_batch(
+            self.costs, tiers, np.array([p.flops for p in profs]), bps, nb,
+            server_flops=self.server_flops, n_sharing=len(participants),
+        )
+        self.sched.observe_cohort(participants, tiers, t["client"] + t["comm"], bps, nb)
+        return t["total"]
 
     # ------------------------------------------------------------------
     # checkpointing (server state: global params + per-tier aux heads +

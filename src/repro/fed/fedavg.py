@@ -5,7 +5,6 @@ straggler (slowest full-model client) bounds the round, which DTFL avoids.
 """
 from __future__ import annotations
 
-from repro.core import aggregation
 from repro.fed.base import BaseTrainer
 
 
@@ -13,11 +12,6 @@ class FedAvgTrainer(BaseTrainer):
     name = "fedavg"
 
     def train_round(self, r: int, participants: list[int]) -> float:
-        locals_, weights, times = [], [], []
-        for k in participants:
-            p = self._local_full_steps(r, k, self.params)
-            locals_.append(p)
-            weights.append(len(self.clients[k].dataset))
-            times.append(self._full_model_time(k, self.clients[k].n_batches))
-        self.params = aggregation.weighted_average(locals_, weights)
-        return max(times)
+        self.params = self._train_round_full(r, participants)
+        return max(self._full_model_time(k, self.clients[k].n_batches)
+                   for k in participants)

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from repro.core import aggregation
 from repro.core.local_loss import token_xent
+from repro.data import pipeline
 from repro.fed.base import BaseTrainer, kd_loss
 
 SPLIT_TIER = 1
@@ -82,7 +83,8 @@ class FedGKTTrainer(BaseTrainer):
             cp, ap = self.client_params, self.aux
             co, ao = self.opt.init(cp), self.opt.init(ap)
             for e in range(self.local_epochs):
-                for bi, batch in enumerate(self.clients[k].dataset.epoch(r * 131 + e)):
+                for bi, batch in enumerate(self.clients[k].dataset.epoch(
+                        r * pipeline.ROUND_SEED_STRIDE + e)):
                     batch = {k2: jnp.asarray(v) for k2, v in batch.items()}
                     teacher = self._teacher.get((k, bi))
                     use_kd = teacher is not None

@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import jax
 
-from repro.core import aggregation
 from repro.fed.base import BaseTrainer
 from repro import optim
 
@@ -22,13 +21,9 @@ class FedYogiTrainer(BaseTrainer):
         self.server_opt_state = self.server_opt.init(self.params)
 
     def train_round(self, r: int, participants: list[int]) -> float:
-        locals_, weights, times = [], [], []
-        for k in participants:
-            p = self._local_full_steps(r, k, self.params)
-            locals_.append(p)
-            weights.append(len(self.clients[k].dataset))
-            times.append(self._full_model_time(k, self.clients[k].n_batches))
-        avg = aggregation.weighted_average(locals_, weights)
+        times = [self._full_model_time(k, self.clients[k].n_batches)
+                 for k in participants]
+        avg = self._train_round_full(r, participants)
         pseudo_grad = jax.tree.map(lambda g, l: g - l, self.params, avg)
         self.params, self.server_opt_state = self.server_opt.update(
             self.params, pseudo_grad, self.server_opt_state

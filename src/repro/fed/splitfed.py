@@ -12,9 +12,6 @@ makes SplitFed slow in the paper's Table 3.
 """
 from __future__ import annotations
 
-import jax
-
-from repro.core import aggregation
 from repro.fed.base import BaseTrainer
 
 SPLIT_TIER = 1  # 0-based: client keeps md1..md2, the paper's SplitFed split
@@ -24,14 +21,9 @@ class SplitFedTrainer(BaseTrainer):
     name = "splitfed"
 
     def train_round(self, r: int, participants: list[int]) -> float:
-        locals_, weights, times = [], [], []
-        for k in participants:
-            p = self._local_full_steps(r, k, self.params)  # exact same math
-            locals_.append(p)
-            weights.append(len(self.clients[k].dataset))
-            times.append(self._splitfed_time(k, self.clients[k].n_batches))
-        self.params = aggregation.weighted_average(locals_, weights)
-        return max(times)
+        self.params = self._train_round_full(r, participants)  # exact same math
+        return max(self._splitfed_time(k, self.clients[k].n_batches)
+                   for k in participants)
 
     def _splitfed_time(self, cid: int, nb: int) -> float:
         prof = self.env.profile(cid)

@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import aggregation
 from repro.fed.base import BaseTrainer
 
 N_TIERS = 3
@@ -37,13 +36,10 @@ class TiFLTrainer(BaseTrainer):
         tiers = self._tiers(participants)
         chosen = tiers[self._round_robin % len(tiers)]
         self._round_robin += 1
-        locals_, weights, times = [], [], []
+        self.params = self._train_round_full(r, chosen)
+        times = []
         for k in chosen:
-            p = self._local_full_steps(r, k, self.params)
-            locals_.append(p)
-            weights.append(len(self.clients[k].dataset))
             t = self._full_model_time(k, self.clients[k].n_batches)
             self._speed_obs[k] = t
             times.append(t)
-        self.params = aggregation.weighted_average(locals_, weights)
         return max(times)

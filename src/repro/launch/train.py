@@ -83,6 +83,10 @@ def main(argv=None):
     ap.add_argument("--full-size", action="store_true",
                     help="full config (TPU scale) instead of the reduced variant")
     ap.add_argument("--scheduler", default="dynamic")
+    ap.add_argument("--engine", default="cohort", choices=["cohort", "loop"],
+                    help="cohort: vectorized tier-cohort round engine (one "
+                         "vmap+scan program per tier); loop: per-client "
+                         "sequential debug path")
     ap.add_argument("--target-acc", type=float, default=None)
     ap.add_argument("--participation", type=float, default=1.0)
     ap.add_argument("--lr", type=float, default=1e-3)
@@ -107,6 +111,7 @@ def main(argv=None):
     env = HeteroEnv(args.clients, switch_every=args.switch_every, seed=args.seed)
     trainer_cls = TRAINERS[args.method]
     kw = {"scheduler": args.scheduler} if args.method == "dtfl" else {}
+    kw["cohort"] = args.engine == "cohort"
     trainer = trainer_cls(adapter, clients, env, optim.adam(args.lr), seed=args.seed, **kw)
 
     t0 = time.time()

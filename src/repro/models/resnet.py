@@ -37,9 +37,28 @@ def conv_init(key, k: int, cin: int, cout: int) -> jax.Array:
 
 
 def conv(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
-    return jax.lax.conv_general_dilated(
-        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
-    )
+    """SAME conv as im2col + matmul (exactly equals lax.conv_general_dilated).
+
+    Expressed with slices/pad/dot instead of the conv primitive so that the
+    cohort engine's per-client ``jax.vmap`` lowers to batched GEMMs; vmapping
+    the conv primitive over per-client weights produces grouped convolutions
+    that XLA:CPU executes far slower than the equivalent batched matmuls.
+    """
+    k, _, cin, cout = w.shape
+    _, H, W, _ = x.shape
+    if k == 1:
+        return x[:, ::stride, ::stride, :] @ w.reshape(cin, cout)
+    oh, ow = -(-H // stride), -(-W // stride)
+    ph = max((oh - 1) * stride + k - H, 0)
+    pw = max((ow - 1) * stride + k - W, 0)
+    xp = jnp.pad(x, ((0, 0), (ph // 2, ph - ph // 2), (pw // 2, pw - pw // 2), (0, 0)))
+    cols = [
+        xp[:, i : i + stride * (oh - 1) + 1 : stride,
+            j : j + stride * (ow - 1) + 1 : stride, :]
+        for i in range(k)
+        for j in range(k)
+    ]
+    return jnp.concatenate(cols, axis=-1) @ w.reshape(k * k * cin, cout)
 
 
 def groupnorm(x: jax.Array, scale, bias, groups: int = 8, eps: float = 1e-5) -> jax.Array:

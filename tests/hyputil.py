@@ -1,0 +1,52 @@
+"""Hypothesis shim: use the real library when installed, otherwise turn
+``@given`` property tests into skips so the suite still collects and runs.
+
+The container is offline; ``requirements-dev.txt`` declares the optional
+dependency for environments that can install it.
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised in the offline container
+    HAVE_HYPOTHESIS = False
+
+    class _DummyStrategy:
+        """Absorbs any strategy-building call chain (.map, .flatmap, |, ...)."""
+
+        def __getattr__(self, name):
+            return lambda *args, **kwargs: _DummyStrategy()
+
+        def __call__(self, *args, **kwargs):
+            return _DummyStrategy()
+
+        def __or__(self, other):
+            return _DummyStrategy()
+
+    class _Strategies:
+        def __getattr__(self, name):
+            return lambda *args, **kwargs: _DummyStrategy()
+
+    st = _Strategies()
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def skipped():
+                pass
+
+            skipped.__name__ = fn.__name__
+            skipped.__doc__ = fn.__doc__
+            return skipped
+
+        return deco

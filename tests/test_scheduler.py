@@ -1,7 +1,7 @@
 """Algorithm 1 invariants: tier profiling, EMA, T_max assignment."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hyputil import given, settings, st
 
 from repro.core.scheduler import DynamicTierScheduler, EMA, StaticScheduler, TierProfile
 from repro.core import timemodel

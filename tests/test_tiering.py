@@ -2,7 +2,7 @@
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from hyputil import given, settings, st
 
 from repro.configs import ASSIGNED_ARCHS, get_config
 from repro.core import tiering
