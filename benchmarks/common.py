@@ -39,14 +39,25 @@ def image_setup(n_clients=10, samples=2000, batch=32, iid=True, n_classes=10, se
 
 def run_method(method, cfg, clients, ev, *, cost_model="resnet-110", rounds=8,
                target=None, scheduler="dynamic", participation=1.0, seed=0,
-               switch_every=50, dcor_alpha=0.0, lr=1e-3, cohort=True):
+               switch_every=50, dcor_alpha=0.0, lr=1e-3, cohort=True,
+               engine="rounds", churn=None, n_groups=3):
+    """``engine``: "rounds" (legacy scalar clock), "events" (discrete-event
+    sync; supports ``churn``), or "async" (FedAT-style per-tier pacing).
+    ``fedat`` always runs async regardless of ``engine``."""
     cost_cfg = get_resnet(cost_model)
     adapter = ResNetAdapter(cfg, cost_cfg=cost_cfg, dcor_alpha=dcor_alpha)
     env = HeteroEnv(len(clients), switch_every=switch_every, seed=seed)
     kw = {"scheduler": scheduler} if method == "dtfl" else {}
     kw["cohort"] = cohort
+    if method == "fedat":
+        kw["n_groups"] = n_groups
     tr = TRAINERS[method](adapter, clients, env, optim.adam(lr), seed=seed, **kw)
-    logs = tr.run(rounds, ev, target_acc=target, participation=participation)
+    run_kw = {"churn": churn}
+    if method != "fedat":  # FedAT is async by construction
+        run_kw["engine"] = engine
+    if engine == "async" and method != "fedat":
+        run_kw["n_groups"] = n_groups
+    logs = tr.run(rounds, ev, target_acc=target, participation=participation, **run_kw)
     return logs
 
 

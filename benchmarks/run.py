@@ -7,9 +7,9 @@ import time
 
 
 def main() -> None:
-    from benchmarks import (fig3_tier_count, roofline, table1_tier_times,
-                            table2_normalized, table3_baselines,
-                            table4_scaling, table5_privacy)
+    from benchmarks import (fig3_tier_count, fig_async_timeline, roofline,
+                            table1_tier_times, table2_normalized,
+                            table3_baselines, table4_scaling, table5_privacy)
 
     suites = [
         ("table1_tier_times", table1_tier_times.main),
@@ -17,6 +17,7 @@ def main() -> None:
         ("table3_baselines", table3_baselines.main),
         ("table4_scaling", table4_scaling.main),
         ("fig3_tier_count", fig3_tier_count.main),
+        ("fig_async_timeline", fig_async_timeline.main),
         ("table5_privacy", table5_privacy.main),
         ("roofline", roofline.main),
     ]

@@ -251,6 +251,21 @@ def simulate_client_times(
     }
 
 
+def rescale_remaining(
+    total: float, elapsed: float,
+    old: ResourceProfile, new: ResourceProfile,
+) -> float:
+    """New completion offset after a mid-round profile switch at ``elapsed``.
+
+    The remaining round time is scaled by the compute-speed ratio: compute
+    dominates the Eq.-5 total in the paper's regime, and the event layer
+    deliberately does not track the compute/comm split of the *remaining*
+    work. Used by the churn path of the event engine (fed/engine.py).
+    """
+    remaining = max(float(total) - float(elapsed), 0.0)
+    return float(elapsed) + remaining * (old.flops / new.flops)
+
+
 def simulate_client_times_batch(
     costs: TierCostTable,
     tiers: np.ndarray,

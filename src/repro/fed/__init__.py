@@ -1,7 +1,9 @@
-"""Federated trainers: DTFL + the paper's baselines."""
+"""Federated trainers: DTFL + the paper's baselines + the event engine."""
 from repro.fed.adapter import ResNetAdapter, TransformerAdapter  # noqa: F401
-from repro.fed.client import HeteroEnv, SimClient  # noqa: F401
+from repro.fed.client import ChurnModel, HeteroEnv, SimClient  # noqa: F401
 from repro.fed.dtfl import DTFLTrainer  # noqa: F401
+from repro.fed.engine import RoundLog, RoundPlan  # noqa: F401
+from repro.fed.fedat import FedATTrainer  # noqa: F401
 from repro.fed.fedavg import FedAvgTrainer  # noqa: F401
 from repro.fed.fedgkt import FedGKTTrainer  # noqa: F401
 from repro.fed.fedyogi import FedYogiTrainer  # noqa: F401
@@ -17,4 +19,5 @@ TRAINERS = {
     "fedgkt": FedGKTTrainer,
     "tifl": TiFLTrainer,
     "drop30": DropStragglerTrainer,
+    "fedat": FedATTrainer,
 }

@@ -6,8 +6,6 @@ model, partitions, eval batch; only the algorithm and its time profile vary.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -15,8 +13,9 @@ import numpy as np
 from repro.core import aggregation, timemodel
 from repro.data import pipeline
 from repro.fed import cohort as cohort_engine
+from repro.fed import engine as event_engine
 from repro.fed.client import HeteroEnv, SimClient
-from repro.fed.dtfl import RoundLog
+from repro.fed.engine import RoundLog, RoundPlan
 
 
 def kd_loss(student_logits: jax.Array, teacher_logits: jax.Array, temp: float = 1.0) -> jax.Array:
@@ -31,6 +30,12 @@ class BaseTrainer:
     """Round loop scaffolding; subclasses implement train_round()."""
 
     name = "base"
+    # whether the async engine's default train_group (plain FedAvg-style
+    # group aggregation) faithfully represents this algorithm. Trainers
+    # whose algorithm lives in execute_round / select_clients (fedyogi's
+    # server optimizer, fedgkt's KD phases, tifl/drop30's selection) must
+    # NOT silently degrade to FedAvg under engine="async".
+    supports_async = True
 
     def __init__(self, adapter, clients: list[SimClient], env: HeteroEnv, optimizer,
                  *, seed: int = 0, local_epochs: int = 1,
@@ -51,12 +56,85 @@ class BaseTrainer:
         return k
 
     # ------------------------------------------------------------------
+    # engine hooks (fed/engine.py contract). Full-model baselines override
+    # select_clients / client_time / execute_round / observe_round; the
+    # defaults implement FedAvg semantics.
+    # ------------------------------------------------------------------
+    def select_clients(self, r: int, participants: list[int]) -> list[int]:
+        """Which participants actually train (TiFL picks a tier, drop30 the
+        fastest subset)."""
+        return list(participants)
+
+    def client_time(self, k: int) -> float:
+        """Planned Eq.-5 completion offset for client ``k`` under this
+        algorithm's time profile."""
+        return self._full_model_time(k, self.clients[k].n_batches)
+
+    def plan_round(self, r: int, participants: list[int]) -> RoundPlan:
+        self.env.maybe_switch(r)
+        trained = list(self.select_clients(r, participants))
+        times = np.array([self.client_time(k) for k in trained], float)
+        return RoundPlan(
+            participants=list(participants), trained=trained,
+            assign={k: 0 for k in trained}, times=times,
+        )
+
+    def execute_round(self, r: int, plan: RoundPlan, trained: list[int]) -> float:
+        """Train the survivors; returns extra serial time (FedGKT's server
+        phase) appended after the last completion."""
+        if trained:
+            self.params = self._train_round_full(r, trained)
+        return 0.0
+
+    def observe_round(self, plan: RoundPlan, idx: list[int], obs_times, totals) -> None:
+        """Feed event-derived timestamps back (TiFL's speed profiling)."""
+
+    def train_group(self, r: int, plan: RoundPlan, trained: list[int]):
+        """Async-tier hook: group aggregate without committing to params."""
+        tree = self._train_round_full(r, trained)
+        return tree, float(sum(len(self.clients[k].dataset) for k in trained))
+
+    def async_groups(self, cids: list[int], n_groups: int) -> list[list[int]]:
+        """Speed groups (fast -> slow) by this algorithm's own time profile —
+        the FedAT/TiFL tier-profiling step."""
+        return event_engine.split_speed_groups(
+            sorted(cids, key=self.client_time), n_groups
+        )
+
+    # ------------------------------------------------------------------
     def train_round(self, r: int, participants: list[int]) -> float:
-        raise NotImplementedError
+        """Legacy scalar-clock round: plan -> execute(all) -> observe(all)."""
+        plan = self.plan_round(r, participants)
+        extra = self.execute_round(r, plan, plan.trained)
+        self.observe_round(
+            plan, list(range(len(plan.trained))), plan.times, plan.times
+        )
+        return float(plan.times.max()) + extra
 
     def run(self, n_rounds: int, eval_batch: dict, *, target_acc: float | None = None,
-            participation: float = 1.0, eval_every: int = 1, verbose: bool = False
+            participation: float = 1.0, eval_every: int = 1, verbose: bool = False,
+            engine: str = "rounds", churn=None, n_groups: int = 3,
             ) -> list[RoundLog]:
+        if engine == "events":
+            return event_engine.run_events(
+                self, n_rounds, eval_batch, target_acc=target_acc,
+                participation=participation, eval_every=eval_every,
+                verbose=verbose, churn=churn,
+            )
+        if engine == "async":
+            if not self.supports_async:
+                raise ValueError(
+                    f"{self.name} has no faithful async formulation (its "
+                    "algorithm lives outside train_group); run it with "
+                    "engine='rounds' or 'events', or use method 'fedat'"
+                )
+            return event_engine.run_async(
+                self, n_rounds, eval_batch, target_acc=target_acc,
+                participation=participation, eval_every=eval_every,
+                verbose=verbose, churn=churn, n_groups=n_groups,
+            )
+        if engine != "rounds":
+            raise ValueError(f"unknown engine {engine!r}")
         rng = np.random.default_rng(0)
         eval_batch = {k: jnp.asarray(v) for k, v in eval_batch.items()}
         eval_fn = jax.jit(self.adapter.eval_acc)
@@ -64,7 +142,6 @@ class BaseTrainer:
         n_part = max(1, int(participation * len(self.clients)))
         for r in range(n_rounds):
             participants = sorted(rng.choice(len(self.clients), n_part, replace=False).tolist())
-            self.env.maybe_switch(r)
             straggler = self.train_round(r, participants)
             clock += straggler
             acc = float(eval_fn(self.params, eval_batch)) if r % eval_every == 0 else (

@@ -13,15 +13,13 @@ from repro.fed.base import BaseTrainer
 
 class DropStragglerTrainer(BaseTrainer):
     name = "drop30"
+    supports_async = False  # algorithm lives outside train_group
 
     def __init__(self, *args, drop_frac: float = 0.3, **kw):
         super().__init__(*args, **kw)
         self.drop_frac = drop_frac
 
-    def train_round(self, r: int, participants: list[int]) -> float:
-        times = {k: self._full_model_time(k, self.clients[k].n_batches)
-                 for k in participants}
+    def select_clients(self, r: int, participants: list[int]) -> list[int]:
+        times = {k: self.client_time(k) for k in participants}
         keep_n = max(1, int(np.ceil(len(participants) * (1 - self.drop_frac))))
-        kept = sorted(participants, key=lambda k: times[k])[:keep_n]
-        self.params = self._train_round_full(r, kept)
-        return max(times[k] for k in kept)
+        return sorted(participants, key=lambda k: times[k])[:keep_n]

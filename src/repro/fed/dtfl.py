@@ -18,9 +18,6 @@ Per round:
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass, field
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -29,20 +26,15 @@ from repro.core import aggregation, timemodel
 from repro.core.scheduler import DynamicTierScheduler, StaticScheduler, TierProfile
 from repro.data import pipeline
 from repro.fed import cohort as cohort_engine
+from repro.fed import engine as event_engine
 from repro.fed.adapter import DTFLStepState
 from repro.fed.client import HeteroEnv, SimClient
-
-
-@dataclass
-class RoundLog:
-    round: int
-    clock: float
-    acc: float
-    assignment: dict[int, int]
-    straggler: float
+from repro.fed.engine import RoundLog, RoundPlan  # noqa: F401 (re-export)
 
 
 class DTFLTrainer:
+    name = "dtfl"
+
     def __init__(
         self,
         adapter,
@@ -140,18 +132,81 @@ class DTFLTrainer:
         return self._cohort_cache[tier]
 
     # ------------------------------------------------------------------
-    def train_round(self, r: int, participants: list[int]) -> tuple[float, dict[int, int]]:
+    # engine hooks (fed/engine.py contract): plan -> execute -> observe
+    # ------------------------------------------------------------------
+    def plan_round(self, r: int, participants: list[int]) -> RoundPlan:
+        """Profile switching + Algorithm-1 scheduling + analytic Eq.-5 times.
+
+        Pure planning: no parameter updates, no scheduler observations — the
+        engine decides which planned clients actually report (churn)."""
         self.env.maybe_switch(r)
         assign = self.sched.schedule(participants)
-        if self.cohort:
-            self._train_round_cohort(r, participants, assign)
-        else:
-            self._train_round_sequential(r, participants, assign)
-        times = self._simulate_and_observe(participants, assign)
-        return float(times.max()), assign
+        tiers = np.array([assign[k] for k in participants])
+        profs = [self.env.profile(k) for k in participants]
+        bps = np.array([p.bytes_per_s for p in profs])
+        nb = np.array([self.clients[k].n_batches for k in participants])
+        t = timemodel.simulate_client_times_batch(
+            self.costs, tiers, np.array([p.flops for p in profs]), bps, nb,
+            server_flops=self.server_flops, n_sharing=len(participants),
+        )
+        return RoundPlan(
+            participants=list(participants), trained=list(participants),
+            assign=assign, times=t["total"],
+            obs={"t": t["client"] + t["comm"], "nu": bps, "nb": nb},
+        )
 
-    def _train_round_cohort(self, r, participants, assign) -> None:
-        """O(n_tiers) device programs: one vmap+scan per (tier, shape) cohort."""
+    def execute_round(self, r: int, plan: RoundPlan, trained: list[int]) -> float:
+        if not trained:
+            return 0.0
+        if self.cohort:
+            self.params = self._train_cohorts(r, trained, plan.assign)
+        else:
+            self.params = self._train_sequential(r, trained, plan.assign)
+        return 0.0
+
+    def observe_round(self, plan: RoundPlan, idx: list[int], obs_times, totals) -> None:
+        # contract (see fed/engine.py): obs_times is pre-sliced to idx;
+        # plan.obs arrays are full-length and sliced here
+        if not len(idx):
+            return
+        sel = np.asarray(idx, int)
+        ks = [plan.trained[i] for i in idx]
+        tiers = [plan.assign[k] for k in ks]
+        self.sched.observe_cohort(
+            ks, tiers, obs_times, plan.obs["nu"][sel], plan.obs["nb"][sel]
+        )
+
+    def train_group(self, r: int, plan: RoundPlan, trained: list[int]):
+        """Async-tier hook: group-local training that returns the aggregated
+        tree (per-tier aggregation) instead of committing it, so the async
+        merger can staleness-weight it across tiers."""
+        train = self._train_cohorts if self.cohort else self._train_sequential
+        tree = train(r, trained, plan.assign)
+        return tree, float(sum(len(self.clients[k].dataset) for k in trained))
+
+    def async_groups(self, cids: list[int], n_groups: int) -> list[list[int]]:
+        """Speed groups from the SCHEDULER's estimates (never ground truth):
+        min-over-allowed-tiers T_hat, ascending — fast group first. A static
+        scheduler has no estimates; its groups are contiguous slices."""
+        if isinstance(self.sched, StaticScheduler):
+            order = list(cids)
+        else:
+            sel = np.array(self.sched.allowed)
+            est = self.sched.estimate_matrix(list(cids))[:, sel].min(axis=1)
+            order = [cids[i] for i in np.argsort(est, kind="stable")]
+        return event_engine.split_speed_groups(order, n_groups)
+
+    # ------------------------------------------------------------------
+    def train_round(self, r: int, participants: list[int]) -> tuple[float, dict[int, int]]:
+        """Legacy scalar-clock round: plan -> execute(all) -> observe(all)."""
+        plan = self.plan_round(r, participants)
+        self.execute_round(r, plan, plan.trained)
+        self.observe_round(plan, list(range(len(plan.trained))), plan.obs["t"], plan.times)
+        return float(plan.times.max()), plan.assign
+
+    def _train_cohorts(self, r, participants, assign):
+        """O(n_tiers) device programs: one vmap+scan per (tier, shape) cohort.
+        Returns the N_k/N aggregated global tree; updates per-tier aux heads."""
         merged_trees, merged_ws = [], []
         aux_by_tier: dict[int, list] = {}
         cohorts = cohort_engine.build_cohorts(
@@ -165,13 +220,13 @@ class DTFLTrainer:
             merged_trees.append(merged)
             merged_ws.append(w)
             aux_by_tier.setdefault(co.tier, []).append((aux, w))
-        self.params = aggregation.weighted_average_cohorts(merged_trees, merged_ws)
         for tier, parts in aux_by_tier.items():
             self.aux[tier] = aggregation.weighted_average_cohorts(
                 [a for a, _ in parts], [w for _, w in parts]
             )
+        return aggregation.weighted_average_cohorts(merged_trees, merged_ws)
 
-    def _train_round_sequential(self, r, participants, assign) -> None:
+    def _train_sequential(self, r, participants, assign):
         """Per-client loop (debug escape hatch; O(clients x batches) dispatches)."""
         round_aux = dict(self.aux)  # cohort members share the round-start head
         merged, weights = [], []
@@ -192,25 +247,11 @@ class DTFLTrainer:
             aux_by_tier.setdefault(tier, []).append((state.aux, len(cl.dataset)))
             merged.append(self.adapter.merge(state.client, state.server))
             weights.append(len(cl.dataset))
-        self.params = aggregation.weighted_average(merged, weights)
         for tier, parts in aux_by_tier.items():
             self.aux[tier] = aggregation.weighted_average(
                 [a for a, _ in parts], [w for _, w in parts]
             )
-
-    def _simulate_and_observe(self, participants, assign) -> np.ndarray:
-        """Vectorized ground-truth times + scheduler observations; identical
-        values to the scalar per-client path."""
-        tiers = np.array([assign[k] for k in participants])
-        profs = [self.env.profile(k) for k in participants]
-        bps = np.array([p.bytes_per_s for p in profs])
-        nb = np.array([self.clients[k].n_batches for k in participants])
-        t = timemodel.simulate_client_times_batch(
-            self.costs, tiers, np.array([p.flops for p in profs]), bps, nb,
-            server_flops=self.server_flops, n_sharing=len(participants),
-        )
-        self.sched.observe_cohort(participants, tiers, t["client"] + t["comm"], bps, nb)
-        return t["total"]
+        return aggregation.weighted_average(merged, weights)
 
     # ------------------------------------------------------------------
     # checkpointing (server state: global params + per-tier aux heads +
@@ -273,7 +314,26 @@ class DTFLTrainer:
         verbose: bool = False,
         checkpoint_path: str | None = None,
         checkpoint_every: int = 10,
+        engine: str = "rounds",
+        churn=None,
+        n_groups: int = 3,
     ) -> list[RoundLog]:
+        if engine == "events":
+            return event_engine.run_events(
+                self, n_rounds, eval_batch, target_acc=target_acc,
+                participation=participation, eval_every=eval_every,
+                verbose=verbose, churn=churn,
+                checkpoint_path=checkpoint_path, checkpoint_every=checkpoint_every,
+            )
+        if engine == "async":
+            return event_engine.run_async(
+                self, n_rounds, eval_batch, target_acc=target_acc,
+                participation=participation, eval_every=eval_every,
+                verbose=verbose, churn=churn, n_groups=n_groups,
+                checkpoint_path=checkpoint_path, checkpoint_every=checkpoint_every,
+            )
+        if engine != "rounds":
+            raise ValueError(f"unknown engine {engine!r}")
         rng = np.random.default_rng(0)
         eval_batch = {k: jnp.asarray(v) for k, v in eval_batch.items()}
         eval_fn = jax.jit(self.adapter.eval_acc)

@@ -1,0 +1,369 @@
+"""Event-driven federation engine over the discrete-event core.
+
+``core/events.py`` supplies the virtual clock and deterministic event queue;
+this layer turns a trainer's *round plan* into completion events, drains due
+events back into (tier, shape) cohorts, and executes them through the
+existing vectorized cohort programs (``fed/cohort.py``) — async semantics
+cost no per-client dispatch.
+
+Trainer contract (implemented by ``BaseTrainer`` and ``DTFLTrainer``):
+
+  plan_round(r, participants) -> RoundPlan
+      Profile switching + scheduling/selection + the analytic Eq.-5
+      completion offset of every client that will train. Pure planning: no
+      parameter updates, no scheduler observations.
+  execute_round(r, plan, trained) -> float
+      Train ``trained`` (the survivors) through the cohort programs and fold
+      the result into the trainer's state. Returns extra *serial* simulated
+      time appended after the last completion (e.g. FedGKT's server phase).
+  observe_round(plan, idx, obs_times, totals)
+      Feed the event-derived timestamps of the clients that actually
+      reported back to the scheduler / speed profiler. Contract: ``idx``
+      indexes into ``plan.trained``; ``obs_times`` and ``totals`` are
+      ALREADY SLICED to ``idx`` (obs_times[j] belongs to
+      plan.trained[idx[j]]) — per-participant plan arrays such as
+      ``plan.obs['nu']`` are full-length and must be indexed with ``idx``.
+  train_group(r, plan, trained) -> (tree, weight)     [async mode]
+      Like execute_round but returns the group-aggregated parameter tree
+      instead of committing it, so the async merger can staleness-weight it.
+  async_groups(cids, n_groups) -> list[list[int]]     [async mode]
+      Speed grouping (fast -> slow) for FedAT-style per-tier pacing.
+
+Three run modes:
+
+  * :func:`run_events` — **sync**: every round's completions drain before
+    aggregation. Without churn this reproduces the legacy scalar-clock loop
+    exactly (same participant sampling, same clock, same scheduler
+    observations — equivalence-tested in ``tests/test_events.py``); with a
+    :class:`~repro.fed.client.ChurnModel` it adds dropout / arrival /
+    mid-round profile switches that the scalar loop cannot express.
+  * :func:`run_async` — **async tiers**: clients are grouped by speed; each
+    group paces itself, and every group completion triggers a per-tier
+    aggregation plus a staleness-weighted cross-tier merge (FedAT,
+    arXiv:2010.05958). Fast groups stop waiting for stragglers entirely.
+  * the legacy ``rounds`` loop stays in the trainers as the scalar-clock
+    reference path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation, timemodel
+from repro.core.events import EventQueue
+
+
+@dataclass
+class RoundLog:
+    round: int
+    clock: float
+    acc: float
+    assignment: dict[int, int]
+    straggler: float
+
+
+@dataclass
+class RoundPlan:
+    """A trainer's declarative plan for one round (or one async wave)."""
+
+    participants: list[int]        # sampled participants
+    trained: list[int]             # subset that actually computes (TiFL/drop30)
+    assign: dict[int, int]         # cid -> tier (constant for full-model)
+    times: np.ndarray              # (len(trained),) Eq.-5 completion offsets
+    obs: dict | None = None        # scheduler observation arrays:
+                                   #   t (client+comm), nu, nb — or None
+
+
+def split_speed_groups(order: list[int], n_groups: int) -> list[list[int]]:
+    """Slice a fast->slow ordering into ``n_groups`` contiguous speed groups
+    (the remainder joins the slowest group; fewer clients than groups yields
+    fewer groups). Shared by every ``async_groups`` implementation so DTFL
+    and the full-model baselines group identically."""
+    cut = max(1, len(order) // n_groups)
+    groups = [order[i * cut: (i + 1) * cut] for i in range(n_groups - 1)]
+    groups.append(order[(n_groups - 1) * cut:])
+    return [g for g in groups if g]
+
+
+def _participants_rng() -> np.random.Generator:
+    # the legacy loops draw participants from default_rng(0); the engine must
+    # consume the identical stream for sync-mode equivalence
+    return np.random.default_rng(0)
+
+
+def _eval_setup(trainer, eval_batch):
+    eval_batch = {k: jnp.asarray(v) for k, v in eval_batch.items()}
+    return jax.jit(trainer.adapter.eval_acc), eval_batch
+
+
+# ===========================================================================
+# sync mode: the legacy round loop as a degenerate event schedule
+# ===========================================================================
+
+def run_events(
+    trainer,
+    n_rounds: int,
+    eval_batch: dict,
+    *,
+    target_acc: float | None = None,
+    participation: float = 1.0,
+    eval_every: int = 1,
+    verbose: bool = False,
+    churn=None,
+    checkpoint_path: str | None = None,
+    checkpoint_every: int = 10,
+) -> list[RoundLog]:
+    rng = _participants_rng()
+    eval_fn, eval_batch = _eval_setup(trainer, eval_batch)
+    q = EventQueue()
+    logs: list[RoundLog] = []
+    n_clients = len(trainer.clients)
+
+    for r in range(n_rounds):
+        pool = churn.begin_round(r) if churn is not None else np.arange(n_clients)
+        n_part = max(1, min(len(pool), int(participation * n_clients)))
+        participants = sorted(rng.choice(pool, n_part, replace=False).tolist())
+
+        plan = trainer.plan_round(r, participants)
+        start = q.now
+        # one completion event per trained client; payload carries the
+        # planned offset so float identity survives absolute-time round trips
+        pending: dict[int, object] = {}
+        for i, k in enumerate(plan.trained):
+            pending[i] = q.push(
+                start + plan.times[i], "complete",
+                cid=k, idx=i, offset=float(plan.times[i]),
+            )
+        if churn is not None:
+            for kind, i, frac in churn.sample_mid_round(plan.trained, plan.times):
+                q.push(start + frac * plan.times[i], kind,
+                       cid=plan.trained[i], idx=i)
+
+        # drain the round: completions, dropouts, mid-round switches
+        survivors: list[int] = []
+        offsets: dict[int, float] = {}
+        while not q.empty():
+            ev = q.pop()
+            i = ev.payload["idx"]
+            if ev.kind == "complete":
+                survivors.append(i)
+                offsets[i] = ev.payload["offset"]
+            elif ev.kind == "dropout":
+                if i in survivors:
+                    continue  # completed before the dropout fired
+                pending[i].cancel()
+                churn.mark_offline(ev.payload["cid"])
+            elif ev.kind == "switch":
+                if i in survivors:
+                    continue
+                cid = ev.payload["cid"]
+                old = trainer.env.profile(cid)
+                churn.resample_profile(trainer.env, cid)
+                new = trainer.env.profile(cid)
+                new_off = timemodel.rescale_remaining(
+                    pending[i].payload["offset"], ev.time - start, old, new
+                )
+                pending[i].cancel()
+                pending[i] = q.push(
+                    start + new_off, "complete",
+                    cid=cid, idx=i, offset=float(new_off),
+                )
+
+        survivors.sort()
+        trained = [plan.trained[i] for i in survivors]
+        extra = trainer.execute_round(r, plan, trained) or 0.0
+
+        if trained:
+            ratios = np.array(
+                [offsets[i] / plan.times[i] for i in survivors]
+            )
+            totals = np.array([offsets[i] for i in survivors])
+            if plan.obs is not None:
+                obs_t = plan.obs["t"][np.asarray(survivors, int)] * ratios
+            else:
+                obs_t = totals
+            trainer.observe_round(plan, survivors, obs_t, totals)
+            base = float(max(offsets[i] for i in survivors)) + extra
+        else:
+            base = extra  # everyone dropped
+        # the server learns of a dropout at the dropout timestamp, so a round
+        # never ends before the last drained event (q.now)
+        round_end = max(q.now, start + base)
+        straggler = round_end - start
+        q.advance_to(round_end)
+
+        acc = float(eval_fn(trainer.params, eval_batch)) if r % eval_every == 0 else (
+            logs[-1].acc if logs else 0.0
+        )
+        logs.append(RoundLog(r, q.now, acc, plan.assign if hasattr(trainer, "sched") else {}, straggler))
+        if verbose:
+            dropped = len(plan.trained) - len(trained)
+            print(f"[events:{trainer.name}] r={r} clock={q.now:.0f}s acc={acc:.3f}"
+                  + (f" dropped={dropped}" if dropped else ""))
+        if checkpoint_path and (r + 1) % checkpoint_every == 0:
+            trainer.save(checkpoint_path)
+        if target_acc is not None and acc >= target_acc:
+            break
+    if checkpoint_path:
+        trainer.save(checkpoint_path)
+    return logs
+
+
+# ===========================================================================
+# async mode: FedAT-style per-tier pacing + staleness-weighted merge
+# ===========================================================================
+
+def run_async(
+    trainer,
+    n_rounds: int,
+    eval_batch: dict,
+    *,
+    target_acc: float | None = None,
+    participation: float = 1.0,
+    eval_every: int = 1,
+    verbose: bool = False,
+    churn=None,
+    n_groups: int = 3,
+    staleness_lambda: float = 1.0,
+    max_merges: int | None = None,
+    checkpoint_path: str | None = None,
+    checkpoint_every: int = 10,
+) -> list[RoundLog]:
+    """Async tier federation: ``n_rounds`` is a per-group wave budget, so the
+    total merge budget is ``n_rounds * n_groups`` (comparable local work to
+    ``n_rounds`` synchronous rounds when groups are balanced).
+
+    Wave 0 is a synchronous profiling round over all participants — it seeds
+    the speed estimates that ``async_groups`` needs, exactly like FedAT's
+    tier-profiling phase. After it, each group schedules its own completion
+    events and the clock advances per *group* straggler, never per global
+    straggler. A wave trains from the global params as they were at wave
+    LAUNCH (the model the tier downloaded), not from merges that landed
+    while the wave was in flight — that staleness is the phenomenon the
+    staleness-weighted merge compensates for.
+
+    ``checkpoint_every`` counts merges (the async analogue of rounds).
+    """
+    rng = _participants_rng()
+    eval_fn, eval_batch = _eval_setup(trainer, eval_batch)
+    q = EventQueue()
+    logs: list[RoundLog] = []
+    n_clients = len(trainer.clients)
+    budget = max_merges if max_merges is not None else max(1, n_rounds) * n_groups
+
+    # ---- wave 0: synchronous profiling round (seeds speed estimates) ----
+    pool = churn.begin_round(0) if churn is not None else np.arange(n_clients)
+    n_part = max(1, min(len(pool), int(participation * n_clients)))
+    participants = sorted(rng.choice(pool, n_part, replace=False).tolist())
+    plan0 = trainer.plan_round(0, participants)
+    trainer.execute_round(0, plan0, plan0.trained)
+    idx0 = list(range(len(plan0.trained)))
+    trainer.observe_round(
+        plan0, idx0,
+        plan0.obs["t"] if plan0.obs is not None else plan0.times, plan0.times,
+    )
+    q.advance_to(float(plan0.times.max()))
+    acc = float(eval_fn(trainer.params, eval_batch))
+    logs.append(RoundLog(0, q.now, acc, plan0.assign, float(plan0.times.max())))
+    if target_acc is not None and acc >= target_acc:
+        return logs
+
+    # ---- async phase ----
+    groups = trainer.async_groups(list(range(n_clients)), n_groups)
+    tier_model: dict[int, object] = {}
+    tier_weight: dict[int, float] = {}
+    last_merge: dict[int, int] = {}
+    wave_idx = {g: 1 for g in range(len(groups))}
+    last_wave_time = {g: float(plan0.times.max()) for g in range(len(groups))}
+    version = 0
+    merges = 0
+
+    def launch(g: int) -> None:
+        members = groups[g]
+        if churn is not None:
+            act = set(churn.active())
+            members = [k for k in members if k in act]
+        if participation < 1.0 and members:
+            m = max(1, int(participation * len(members)))
+            members = sorted(rng.choice(members, m, replace=False).tolist())
+        if not members:
+            # whole group offline: re-poll after the group's last wave
+            # duration (its natural pace), so rejoin latency stays bounded
+            q.push_in(max(last_wave_time[g], 1.0), "wave", g=g, plan=None)
+            return
+        plan = trainer.plan_round(wave_idx[g], members)
+        last_wave_time[g] = float(plan.times.max())
+        # snapshot the global params the tier downloads at wave start; the
+        # wave trains from this even if other groups merge meanwhile
+        q.push_in(last_wave_time[g], "wave", g=g, plan=plan,
+                  start_params=trainer.params)
+
+    for g in range(len(groups)):
+        launch(g)
+
+    while merges < budget:
+        ev = q.pop()
+        if ev is None:
+            break
+        g, plan = ev.payload["g"], ev.payload["plan"]
+        if churn is not None:
+            churn.begin_round(wave_idx[g])
+        if plan is None:
+            launch(g)
+            continue
+        # churn inside the wave: dropouts leave the wave, switches re-roll
+        # the ground-truth profile for FUTURE waves (the coarse per-group
+        # event already fired, so no mid-wave reschedule is needed)
+        idx = list(range(len(plan.trained)))
+        if churn is not None:
+            for kind, i, _ in churn.sample_mid_round(plan.trained, plan.times):
+                if kind == "dropout":
+                    churn.mark_offline(plan.trained[i])
+                    idx.remove(i)
+                else:
+                    churn.resample_profile(trainer.env, plan.trained[i])
+        trained = [plan.trained[i] for i in idx]
+        wave_time = float(plan.times.max())
+        if trained:
+            # train from the wave-launch snapshot (the model the tier
+            # actually downloaded), then restore the merged global
+            current = trainer.params
+            trainer.params = ev.payload["start_params"]
+            try:
+                tree, w = trainer.train_group(wave_idx[g], plan, trained)
+            finally:
+                trainer.params = current
+            tier_model[g], tier_weight[g] = tree, w
+            last_merge[g] = version
+            version += 1
+            # staleness-weighted cross-tier merge over groups that reported
+            gs = sorted(tier_model)
+            betas = [
+                tier_weight[x] / (1.0 + staleness_lambda * (version - 1 - last_merge[x]))
+                for x in gs
+            ]
+            trainer.params = aggregation.weighted_average(
+                [tier_model[x] for x in gs], betas
+            )
+            obs_t = (plan.obs["t"][np.asarray(idx, int)]
+                     if plan.obs is not None else plan.times[np.asarray(idx, int)])
+            trainer.observe_round(plan, idx, obs_t, plan.times)
+            merges += 1
+            acc = float(eval_fn(trainer.params, eval_batch)) if (
+                merges % eval_every == 0) else logs[-1].acc
+            logs.append(RoundLog(merges, q.now, acc, dict(plan.assign), wave_time))
+            if verbose:
+                print(f"[async:{trainer.name}] merge={merges} group={g} "
+                      f"clock={q.now:.0f}s acc={acc:.3f}")
+            if checkpoint_path and merges % checkpoint_every == 0:
+                trainer.save(checkpoint_path)
+            if target_acc is not None and acc >= target_acc:
+                break
+        wave_idx[g] += 1
+        launch(g)
+    if checkpoint_path:
+        trainer.save(checkpoint_path)
+    return logs

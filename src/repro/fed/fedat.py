@@ -1,0 +1,44 @@
+"""FedAT-style asynchronous tier federation (Chai et al. 2021, arXiv:2010.05958).
+
+Clients are profiled into speed tiers (like TiFL), but instead of selecting
+ONE tier per synchronous round, every tier paces itself: a tier aggregates
+its members' full-model updates as soon as its own straggler finishes
+(**intra-tier synchronous**), and the server folds the fresh tier model into
+the global model with a **staleness-weighted cross-tier merge** — tiers that
+reported long ago count less. Fast tiers therefore contribute many updates
+while a slow tier completes one, which is exactly the wall-clock win the
+async timeline benchmark (``benchmarks/fig_async_timeline.py``) measures.
+
+Implementation: the generic async event loop in ``fed/engine.py``
+(:func:`repro.fed.engine.run_async`) drives the hook defaults from
+``BaseTrainer`` — ``async_groups`` (speed profiling), ``train_group``
+(per-tier cohort training + N_k/N aggregation), and the engine's
+staleness-weighted merge. ``n_rounds`` is a per-tier wave budget; the merge
+budget is ``n_rounds * n_groups``.
+"""
+from __future__ import annotations
+
+from repro.fed.base import BaseTrainer
+
+
+class FedATTrainer(BaseTrainer):
+    name = "fedat"
+
+    def __init__(self, *args, n_groups: int = 3, staleness_lambda: float = 1.0, **kw):
+        super().__init__(*args, **kw)
+        self.n_groups = n_groups
+        self.staleness_lambda = staleness_lambda
+
+    def run(self, n_rounds, eval_batch, *, engine: str = "async", n_groups=None, **kw):
+        """FedAT is async by construction; ``engine`` is overridable only for
+        debugging (``rounds`` degenerates to FedAvg with FedAT's grouping)."""
+        if engine == "async":
+            from repro.fed import engine as event_engine
+
+            return event_engine.run_async(
+                self, n_rounds, eval_batch,
+                n_groups=n_groups or self.n_groups,
+                staleness_lambda=self.staleness_lambda,
+                **kw,
+            )
+        return super().run(n_rounds, eval_batch, engine=engine, **kw)

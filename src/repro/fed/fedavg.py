@@ -2,6 +2,8 @@
 
 Every client trains the whole global model — the paper's point is that the
 straggler (slowest full-model client) bounds the round, which DTFL avoids.
+FedAvg is exactly the BaseTrainer hook defaults: all participants train,
+completion offsets are full-model times, aggregation is the N_k/N average.
 """
 from __future__ import annotations
 
@@ -10,8 +12,3 @@ from repro.fed.base import BaseTrainer
 
 class FedAvgTrainer(BaseTrainer):
     name = "fedavg"
-
-    def train_round(self, r: int, participants: list[int]) -> float:
-        self.params = self._train_round_full(r, participants)
-        return max(self._full_model_time(k, self.clients[k].n_batches)
-                   for k in participants)

@@ -12,6 +12,8 @@ server-side model on uploaded features with CE + KD against client logits.
 Client-side split is fixed at md2 (He et al.'s small edge model). Round time
 = max_k(client phase) + server phase — the phases are sequential, which is
 why FedGKT trails DTFL in the paper's Table 3 despite small client models.
+In engine terms the server phase is the round's *extra* serial time
+(``execute_round``'s return value), appended after the last completion.
 """
 from __future__ import annotations
 
@@ -21,7 +23,7 @@ import jax.numpy as jnp
 from repro.core import aggregation
 from repro.core.local_loss import token_xent
 from repro.data import pipeline
-from repro.fed.base import BaseTrainer, kd_loss
+from repro.fed.base import BaseTrainer, RoundPlan, kd_loss
 
 SPLIT_TIER = 1
 KD_WEIGHT = 0.5
@@ -29,6 +31,7 @@ KD_WEIGHT = 0.5
 
 class FedGKTTrainer(BaseTrainer):
     name = "fedgkt"
+    supports_async = False  # algorithm lives outside train_group
 
     def __init__(self, *args, **kw):
         super().__init__(*args, **kw)
@@ -76,10 +79,25 @@ class FedGKTTrainer(BaseTrainer):
         return cstep, sstep
 
     # ------------------------------------------------------------------
-    def train_round(self, r: int, participants: list[int]) -> float:
+    def client_time(self, k: int) -> float:
+        """Small edge model + feature/logit upload (phase 1 only)."""
+        prof = self.env.profile(k)
+        nb = self.clients[k].n_batches
+        m = SPLIT_TIER
+        return (
+            self.costs.client_flops[m] * nb * self.local_epochs / prof.flops
+            + (self.costs.z_bytes[m] * nb + self.costs.client_param_bytes[m])
+            / prof.bytes_per_s
+        )
+
+    def execute_round(self, r: int, plan: RoundPlan, trained: list[int]) -> float:
+        """Two-phase KD protocol over the survivors; returns the serial
+        server phase as the round's extra time."""
+        if not trained:
+            return 0.0
         cstep, sstep = self._steps()
-        client_updates, weights, client_times, uploads = [], [], [], []
-        for k in participants:
+        client_updates, weights, uploads = [], [], []
+        for k in trained:
             cp, ap = self.client_params, self.aux
             co, ao = self.opt.init(cp), self.opt.init(ap)
             for e in range(self.local_epochs):
@@ -102,14 +120,6 @@ class FedGKTTrainer(BaseTrainer):
                         uploads.append((k, bi, z, batch, logits))
             client_updates.append((cp, ap))
             weights.append(len(self.clients[k].dataset))
-            prof = self.env.profile(k)
-            nb = self.clients[k].n_batches
-            m = SPLIT_TIER
-            client_times.append(
-                self.costs.client_flops[m] * nb * self.local_epochs / prof.flops
-                + (self.costs.z_bytes[m] * nb + self.costs.client_param_bytes[m])
-                / prof.bytes_per_s
-            )
         # phase 2: server trains the large model on all uploaded features
         for k, bi, z, batch, logits in uploads:
             self.server_params, self.server_opt_state, s_logits = sstep(
@@ -124,4 +134,4 @@ class FedGKTTrainer(BaseTrainer):
         )
         self.aux = aggregation.weighted_average([a for _, a in client_updates], weights)
         self.params = self.adapter.merge(self.client_params, self.server_params)
-        return max(client_times) + server_time
+        return server_time

@@ -2,30 +2,31 @@
 
 The server treats the negative average client delta as a pseudo-gradient and
 applies the Yogi adaptive update. Client-side time profile equals FedAvg's
-(full model locally).
+(full model locally), so only execute_round differs from the defaults.
 """
 from __future__ import annotations
 
 import jax
 
-from repro.fed.base import BaseTrainer
+from repro.fed.base import BaseTrainer, RoundPlan
 from repro import optim
 
 
 class FedYogiTrainer(BaseTrainer):
     name = "fedyogi"
+    supports_async = False  # algorithm lives outside train_group
 
     def __init__(self, *args, server_lr: float = 0.05, **kw):
         super().__init__(*args, **kw)
         self.server_opt = optim.yogi(lr=server_lr)
         self.server_opt_state = self.server_opt.init(self.params)
 
-    def train_round(self, r: int, participants: list[int]) -> float:
-        times = [self._full_model_time(k, self.clients[k].n_batches)
-                 for k in participants]
-        avg = self._train_round_full(r, participants)
+    def execute_round(self, r: int, plan: RoundPlan, trained: list[int]) -> float:
+        if not trained:
+            return 0.0
+        avg = self._train_round_full(r, trained)
         pseudo_grad = jax.tree.map(lambda g, l: g - l, self.params, avg)
         self.params, self.server_opt_state = self.server_opt.update(
             self.params, pseudo_grad, self.server_opt_state
         )
-        return max(times)
+        return 0.0

@@ -7,8 +7,8 @@ is a synchronous round trip:
   client fwd -> upload z -> server fwd+bwd -> download grad_z -> client bwd
 
 The math equals ordinary backprop through the full model (we compute it as
-one jitted step); the cost model charges the sequential path, which is what
-makes SplitFed slow in the paper's Table 3.
+one jitted step); the cost model charges the sequential path
+(``client_time``), which is what makes SplitFed slow in the paper's Table 3.
 """
 from __future__ import annotations
 
@@ -20,10 +20,8 @@ SPLIT_TIER = 1  # 0-based: client keeps md1..md2, the paper's SplitFed split
 class SplitFedTrainer(BaseTrainer):
     name = "splitfed"
 
-    def train_round(self, r: int, participants: list[int]) -> float:
-        self.params = self._train_round_full(r, participants)  # exact same math
-        return max(self._splitfed_time(k, self.clients[k].n_batches)
-                   for k in participants)
+    def client_time(self, k: int) -> float:
+        return self._splitfed_time(k, self.clients[k].n_batches)
 
     def _splitfed_time(self, cid: int, nb: int) -> float:
         prof = self.env.profile(cid)

@@ -4,42 +4,42 @@ each round trains clients FROM ONE TIER (rotating by an accuracy credit),
 but every client still trains the FULL model. Included as the reference
 point between FedAvg and DTFL: selection removes intra-round stragglers but
 pays full-model time on slow tiers and skips data every round.
+
+Speed profiling consumes the event-derived completion timestamps
+(``observe_round``): under churn, only clients that actually reported
+refresh their profile, exactly like a real TiFL server.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.fed.base import BaseTrainer
+from repro.fed.base import BaseTrainer, RoundPlan
 
 N_TIERS = 3
 
 
 class TiFLTrainer(BaseTrainer):
     name = "tifl"
+    supports_async = False  # algorithm lives outside train_group
 
     def __init__(self, *args, **kw):
         super().__init__(*args, **kw)
-        self._speed_obs = {}          # cid -> last full-model time
+        self._speed_obs = {}          # cid -> last observed full-model time
         self._round_robin = 0
 
     def _tiers(self, participants):
         # profile clients by observed (or estimated) full-model time
-        times = {
-            k: self._speed_obs.get(k, self._full_model_time(k, self.clients[k].n_batches))
-            for k in participants
-        }
+        times = {k: self._speed_obs.get(k, self.client_time(k)) for k in participants}
         order = sorted(participants, key=lambda k: times[k])
         cut = max(1, len(order) // N_TIERS)
         return [order[i * cut : (i + 1) * cut] or order[-1:] for i in range(N_TIERS)]
 
-    def train_round(self, r: int, participants: list[int]) -> float:
+    def select_clients(self, r: int, participants: list[int]) -> list[int]:
         tiers = self._tiers(participants)
         chosen = tiers[self._round_robin % len(tiers)]
         self._round_robin += 1
-        self.params = self._train_round_full(r, chosen)
-        times = []
-        for k in chosen:
-            t = self._full_model_time(k, self.clients[k].n_batches)
-            self._speed_obs[k] = t
-            times.append(t)
-        return max(times)
+        return chosen
+
+    def observe_round(self, plan: RoundPlan, idx: list[int], obs_times, totals) -> None:
+        for j, i in enumerate(idx):
+            self._speed_obs[plan.trained[i]] = float(totals[j])

@@ -90,7 +90,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, tier: int | None = N
     t_compile = time.time() - t0
 
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = hlo_analysis.flat_cost_analysis(compiled)
     txt = compiled.as_text()
     hlo = hlo_analysis.analyze(txt)
     terms = hlo_analysis.roofline_terms(hlo)

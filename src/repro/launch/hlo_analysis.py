@@ -274,6 +274,21 @@ def analyze(txt: str) -> dict:
     return out
 
 
+def flat_cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized to a plain dict.
+
+    Older jax versions return a one-element list of per-program dicts; newer
+    ones return the dict directly (and may return None for some backends).
+    Callers should never index the raw result.
+    """
+    ca = compiled.cost_analysis()
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        return dict(ca[0]) if ca else {}
+    return dict(ca)
+
+
 # ---------------------------------------------------------------------------
 # roofline terms (per device); v5e constants from the assignment
 # ---------------------------------------------------------------------------

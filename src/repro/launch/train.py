@@ -21,8 +21,8 @@ from repro.configs.resnet_cifar import get_resnet
 from repro.data.partition import dirichlet_partition, iid_partition
 from repro.data.pipeline import ClientDataset, make_eval_batch
 from repro.data.synthetic import DATASETS, ClassImageTask, SeqTask
-from repro.fed import (DTFLTrainer, HeteroEnv, ResNetAdapter, SimClient,
-                       TransformerAdapter, TRAINERS)
+from repro.fed import (ChurnModel, DTFLTrainer, HeteroEnv, ResNetAdapter,
+                       SimClient, TransformerAdapter, TRAINERS)
 
 
 def build_image_setup(cfg, args):
@@ -83,10 +83,30 @@ def main(argv=None):
     ap.add_argument("--full-size", action="store_true",
                     help="full config (TPU scale) instead of the reduced variant")
     ap.add_argument("--scheduler", default="dynamic")
-    ap.add_argument("--engine", default="cohort", choices=["cohort", "loop"],
-                    help="cohort: vectorized tier-cohort round engine (one "
-                         "vmap+scan program per tier); loop: per-client "
-                         "sequential debug path")
+    ap.add_argument("--engine", default=None, choices=["rounds", "events", "async"],
+                    help="rounds: legacy scalar-clock synchronous loop; "
+                         "events: discrete-event virtual clock (sync semantics, "
+                         "supports churn); async: FedAT-style per-tier pacing "
+                         "with staleness-weighted merges. Default: rounds "
+                         "(async for --method fedat)")
+    ap.add_argument("--exec", dest="exec_mode", default="cohort",
+                    choices=["cohort", "loop"],
+                    help="cohort: vectorized tier-cohort programs (one "
+                         "vmap+scan per tier); loop: per-client sequential "
+                         "debug path")
+    ap.add_argument("--n-groups", type=int, default=3,
+                    help="speed groups for --engine async")
+    ap.add_argument("--churn", action="store_true",
+                    help="enable client churn (events/async engines only)")
+    ap.add_argument("--churn-drop", type=float, default=0.1,
+                    help="per-round mid-round dropout probability")
+    ap.add_argument("--churn-switch", type=float, default=0.1,
+                    help="per-round mid-round profile-switch probability")
+    ap.add_argument("--churn-offline-frac", type=float, default=0.0,
+                    help="fraction of the roster that starts offline and "
+                         "arrives over time")
+    ap.add_argument("--churn-rejoin", type=int, default=2,
+                    help="rounds a dropped client stays offline")
     ap.add_argument("--target-acc", type=float, default=None)
     ap.add_argument("--participation", type=float, default=1.0)
     ap.add_argument("--lr", type=float, default=1e-3)
@@ -111,12 +131,29 @@ def main(argv=None):
     env = HeteroEnv(args.clients, switch_every=args.switch_every, seed=args.seed)
     trainer_cls = TRAINERS[args.method]
     kw = {"scheduler": args.scheduler} if args.method == "dtfl" else {}
-    kw["cohort"] = args.engine == "cohort"
+    kw["cohort"] = args.exec_mode == "cohort"
     trainer = trainer_cls(adapter, clients, env, optim.adam(args.lr), seed=args.seed, **kw)
+
+    # engine defaults per method (fedat is async by construction); an
+    # explicit --engine always wins, including fedat's rounds debug path
+    engine = args.engine or ("async" if args.method == "fedat" else "rounds")
+    churn = None
+    if args.churn:
+        if engine == "rounds":
+            ap.error("--churn requires --engine events or --engine async")
+        churn = ChurnModel(
+            args.clients, drop_prob=args.churn_drop, switch_prob=args.churn_switch,
+            start_offline_frac=args.churn_offline_frac,
+            rejoin_after=args.churn_rejoin, seed=args.seed,
+        )
+    run_kw = {"engine": engine}
+    if engine == "async":
+        run_kw["n_groups"] = args.n_groups
 
     t0 = time.time()
     logs = trainer.run(args.rounds, eval_batch, target_acc=args.target_acc,
-                       participation=args.participation, verbose=True)
+                       participation=args.participation, verbose=True,
+                       churn=churn, **run_kw)
     wall = time.time() - t0
     print(f"[train] {args.method} {args.arch}: {len(logs)} rounds, "
           f"sim_clock={logs[-1].clock:,.0f}s acc={logs[-1].acc:.3f} wall={wall:.0f}s")

@@ -1,0 +1,208 @@
+"""Event engine: queue determinism, sync-mode equivalence vs the legacy
+round loop, churn behaviour, and async-tier sanity.
+
+The sync-mode contract (ISSUE 2 acceptance): a 20-client DTFL run through
+``run(engine="events")`` must produce identical scheduler tier assignments
+and a numerically close (atol 1e-5) clock/accuracy trajectory to the legacy
+scalar-clock loop, because without churn the event schedule degenerates to
+exactly the same numbers.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.configs.resnet_cifar import RESNET56
+from repro.core.events import EventQueue
+from repro.data.partition import iid_partition
+from repro.data.pipeline import ClientDataset, make_eval_batch
+from repro.data.synthetic import ClassImageTask
+from repro.fed import (ChurnModel, DTFLTrainer, FedATTrainer, FedAvgTrainer,
+                       HeteroEnv, ResNetAdapter, SimClient)
+
+
+# ---------------------------------------------------------------------------
+# core/events.py: the queue itself
+# ---------------------------------------------------------------------------
+
+def test_queue_orders_by_time_then_insertion():
+    q = EventQueue()
+    q.push(3.0, "c")
+    q.push(1.0, "a1")
+    q.push(1.0, "a2")  # same time: must pop after a1 (insertion order)
+    q.push(2.0, "b")
+    kinds = []
+    while not q.empty():
+        kinds.append(q.pop().kind)
+    assert kinds == ["a1", "a2", "b", "c"]
+    assert q.now == 3.0
+
+
+def test_queue_cancel_and_past_guard():
+    q = EventQueue()
+    ev = q.push(1.0, "x")
+    q.push(2.0, "y")
+    ev.cancel()
+    assert len(q) == 1
+    assert q.pop().kind == "y"
+    with pytest.raises(ValueError):
+        q.push(1.0, "past")  # now == 2.0
+
+
+def test_queue_drain_until():
+    q = EventQueue()
+    for t in (1.0, 2.0, 5.0):
+        q.push(t, f"t{t}")
+    due = [ev.kind for ev in q.drain_until(3.0)]
+    assert due == ["t1.0", "t2.0"]
+    assert q.now == 3.0  # clock advances even past the last due event
+    assert len(q) == 1
+
+
+# ---------------------------------------------------------------------------
+# fixtures
+# ---------------------------------------------------------------------------
+
+def build(n_clients, samples=640, batch=16, seed=0):
+    cfg = RESNET56.reduced()
+    task = ClassImageTask(n_classes=10, image_size=cfg.image_size)
+    labels = np.random.default_rng(seed).integers(0, 10, samples)
+    parts = iid_partition(labels, n_clients, seed)
+    clients = [SimClient(i, ClientDataset(task, labels, parts[i], batch), None)
+               for i in range(n_clients)]
+    adapter = ResNetAdapter(cfg, cost_cfg=RESNET56)
+    return adapter, clients, make_eval_batch(task, 128)
+
+
+def mk_dtfl(adapter, clients, **kw):
+    return DTFLTrainer(adapter, clients, HeteroEnv(len(clients), seed=0),
+                       optim.adam(1e-3), seed=0, **kw)
+
+
+def assert_trees_close(a, b, atol=1e-5):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# sync mode == legacy round loop (the ISSUE's acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def test_sync_events_match_legacy_rounds_20_clients():
+    adapter, clients, ev = build(20)
+    legacy = mk_dtfl(adapter, clients)
+    events = mk_dtfl(adapter, clients)
+    l1 = legacy.run(3, ev)
+    l2 = events.run(3, ev, engine="events")
+    assert len(l1) == len(l2)
+    for a, b in zip(l1, l2):
+        assert a.assignment == b.assignment        # identical tier assignments
+        assert a.clock == pytest.approx(b.clock, abs=1e-9)
+        assert a.acc == pytest.approx(b.acc, abs=1e-5)
+        assert a.straggler == pytest.approx(b.straggler, abs=1e-9)
+    assert_trees_close(legacy.params, events.params)
+    # scheduler observations identical: same EMA state per (client, tier)
+    for c1, c2 in zip(legacy.sched.clients, events.sched.clients):
+        assert c1.tier == c2.tier and c1.last_obs_tier == c2.last_obs_tier
+        assert set(c1.ema) == set(c2.ema)
+        for m in c1.ema:
+            assert c1.ema[m].value == pytest.approx(c2.ema[m].value, rel=1e-12)
+
+
+def test_sync_events_match_legacy_baseline():
+    adapter, clients, ev = build(4, samples=200)
+    mk = lambda: FedAvgTrainer(adapter, clients, HeteroEnv(4, seed=0),
+                               optim.adam(1e-3), seed=0)
+    l1 = mk().run(2, ev)
+    l2 = mk().run(2, ev, engine="events")
+    for a, b in zip(l1, l2):
+        assert a.clock == pytest.approx(b.clock)
+        assert a.acc == pytest.approx(b.acc, abs=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# determinism under seed
+# ---------------------------------------------------------------------------
+
+def test_event_runs_deterministic_under_seed():
+    """Same seeds -> identical event order, clocks, accs — twice, with churn."""
+    def once():
+        adapter, clients, ev = build(6, samples=240)
+        churn = ChurnModel(6, drop_prob=0.3, switch_prob=0.2, seed=7)
+        tr = mk_dtfl(adapter, clients)
+        return tr.run(4, ev, engine="events", churn=churn)
+
+    a, b = once(), once()
+    assert [(l.clock, l.acc, tuple(sorted(l.assignment.items()))) for l in a] == \
+           [(l.clock, l.acc, tuple(sorted(l.assignment.items()))) for l in b]
+
+
+# ---------------------------------------------------------------------------
+# churn
+# ---------------------------------------------------------------------------
+
+def test_dropout_mid_round_keeps_estimates_finite():
+    """A dropped client leaves no observation; the scheduler's estimate
+    matrix must stay finite and the dropped client must sit out rejoin_after
+    rounds before it can be sampled again."""
+    adapter, clients, ev = build(6, samples=240)
+    churn = ChurnModel(6, drop_prob=0.5, rejoin_after=2, seed=3)
+    tr = mk_dtfl(adapter, clients)
+    logs = tr.run(4, ev, engine="events", churn=churn)
+    est = tr.sched.estimate_matrix(list(range(6)))
+    assert np.isfinite(est).all()
+    assert all(np.isfinite(l.clock) and l.clock > 0 for l in logs)
+    assert logs[-1].clock >= logs[0].clock
+
+
+def test_churn_arrival_and_rejoin_bookkeeping():
+    churn = ChurnModel(10, start_offline_frac=0.3, arrival_prob=1.0, seed=0)
+    assert len(churn.active()) == 7
+    active = churn.begin_round(0)            # arrival_prob=1: everyone joins
+    assert len(active) == 10
+    churn.mark_offline(4)
+    assert 4 not in churn.active()
+    churn.begin_round(1)                      # countdown 2 -> 1
+    assert 4 not in churn.active()
+    active = churn.begin_round(2)             # countdown expires
+    assert 4 in active.tolist()
+
+
+def test_mid_round_switch_reschedules_completion():
+    """Profile switches mid-round change the round straggler vs the no-churn
+    run, and the scheduler observes the event-derived (rescaled) time."""
+    adapter, clients, ev = build(4, samples=160)
+    base = mk_dtfl(adapter, clients).run(2, ev, engine="events")
+    churn = ChurnModel(4, switch_prob=1.0, seed=5)  # every client switches
+    tr = mk_dtfl(adapter, clients)
+    logs = tr.run(2, ev, engine="events", churn=churn)
+    assert logs[0].straggler != pytest.approx(base[0].straggler)
+    est = tr.sched.estimate_matrix(list(range(4)))
+    assert np.isfinite(est).all()
+
+
+# ---------------------------------------------------------------------------
+# async tiers
+# ---------------------------------------------------------------------------
+
+def test_async_dtfl_monotone_clock_and_progress():
+    adapter, clients, ev = build(6, samples=240)
+    tr = mk_dtfl(adapter, clients)
+    logs = tr.run(3, ev, engine="async", n_groups=2)
+    clocks = [l.clock for l in logs]
+    assert clocks == sorted(clocks)
+    assert len(logs) >= 3                      # profiling round + merges
+    assert all(np.isfinite(l.acc) for l in logs)
+
+
+def test_fedat_async_beats_own_sync_clock():
+    """FedAT's per-tier pacing advances the virtual clock by group stragglers
+    only — for the same per-group wave budget its final clock must be below
+    the synchronous equivalent (every round = global straggler)."""
+    adapter, clients, ev = build(6, samples=240)
+    mk = lambda: FedATTrainer(adapter, clients, HeteroEnv(6, seed=0),
+                              optim.adam(1e-3), seed=0, n_groups=2)
+    async_logs = mk().run(2, ev)
+    sync_logs = mk().run(1 + len(async_logs) - 1, ev, engine="rounds")
+    # same number of aggregate updates; async merges on group stragglers
+    assert async_logs[-1].clock < sync_logs[-1].clock

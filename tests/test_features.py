@@ -231,11 +231,17 @@ def test_dryrun_subprocess_single_combo():
 
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
-    env.pop("JAX_PLATFORMS", None)
+    # pin the cpu backend: without it jax probes for a TPU via GCP instance
+    # metadata (30 curl retries per variable, ~3 min of wall time before the
+    # compile even starts). The 512-device dry-run mesh is a HOST platform
+    # flag (xla_force_host_platform_device_count) and works on cpu.
+    env["JAX_PLATFORMS"] = "cpu"
+    # smollm-360m/train_4k lowers+compiles in ~15 s on a 2-CPU container;
+    # the previous whisper-base/long_500k combo ate a 400 s compile timeout.
     out = subprocess.run(
-        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "whisper-base",
-         "--shape", "long_500k", "--no-save"],
-        capture_output=True, text=True, timeout=400, env=env,
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "smollm-360m",
+         "--shape", "train_4k", "--no-save"],
+        capture_output=True, text=True, timeout=180, env=env,
         cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
     )
     assert "lowered + compiled OK" in out.stdout, out.stdout + out.stderr

@@ -47,7 +47,9 @@ def test_flat_cost_analysis_undercounts_but_extractor_does_not():
     x = jax.ShapeDtypeStruct((16, 64), jnp.float32)
     c8 = jax.jit(f).lower(w8, x).compile()
     c2 = jax.jit(f).lower(w2, x).compile()
-    assert c8.cost_analysis()["flops"] == c2.cost_analysis()["flops"]  # the bug
+    # flat_cost_analysis normalizes the list|dict|None return across jax versions
+    ca8, ca2 = H.flat_cost_analysis(c8), H.flat_cost_analysis(c2)
+    assert ca8["flops"] == ca2["flops"]  # the bug
     a8 = H.analyze(c8.as_text())
     a2 = H.analyze(c2.as_text())
     assert a8["flops"] == pytest.approx(4 * a2["flops"], rel=0.05)     # the fix
