@@ -9,8 +9,9 @@ Output convention: every benchmark module's ``main(emit_fn)`` prints CSV
 rows ``<table>,<keys...>,<values...>`` (one schema per module, documented in
 its docstring) so ``benchmarks/run.py`` output is machine-parseable as-is.
 ``run_method`` routes DTFL and the full-model baselines through the cohort
-engine by default (``cohort=False`` selects the sequential debug path);
-FedGKT always runs its sequential two-phase KD protocol.
+engine by default (``exec_plan="loop"`` selects the sequential debug path,
+``ExecPlan.sharded(...)`` the mesh-sharded plane); FedGKT always runs its
+sequential two-phase KD protocol.
 """
 from __future__ import annotations
 
@@ -39,16 +40,17 @@ def image_setup(n_clients=10, samples=2000, batch=32, iid=True, n_classes=10, se
 
 def run_method(method, cfg, clients, ev, *, cost_model="resnet-110", rounds=8,
                target=None, scheduler="dynamic", participation=1.0, seed=0,
-               switch_every=50, dcor_alpha=0.0, lr=1e-3, cohort=True,
+               switch_every=50, dcor_alpha=0.0, lr=1e-3, exec_plan=None,
                engine="rounds", churn=None, n_groups=3):
     """``engine``: "rounds" (legacy scalar clock), "events" (discrete-event
     sync; supports ``churn``), or "async" (FedAT-style per-tier pacing).
-    ``fedat`` always runs async regardless of ``engine``."""
+    ``fedat`` always runs async regardless of ``engine``. ``exec_plan``:
+    None/"cohort" | "loop" | ExecPlan.sharded(mesh) — the execution plane."""
     cost_cfg = get_resnet(cost_model)
     adapter = ResNetAdapter(cfg, cost_cfg=cost_cfg, dcor_alpha=dcor_alpha)
     env = HeteroEnv(len(clients), switch_every=switch_every, seed=seed)
     kw = {"scheduler": scheduler} if method == "dtfl" else {}
-    kw["cohort"] = cohort
+    kw["exec_plan"] = exec_plan
     if method == "fedat":
         kw["n_groups"] = n_groups
     tr = TRAINERS[method](adapter, clients, env, optim.adam(lr), seed=seed, **kw)

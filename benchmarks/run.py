@@ -1,32 +1,48 @@
 # One module per paper table/figure. Each main() prints CSV rows
-# ``table,<keys...>,<values...>``; this driver runs them all.
+# ``table,<keys...>,<values...>``; this driver runs them all, or a subset:
+#
+#   python benchmarks/run.py --only table4_scaling,roofline
 from __future__ import annotations
 
+import argparse
+import importlib
 import sys
 import time
 
+SUITES = [
+    "table1_tier_times",
+    "table2_normalized",
+    "table3_baselines",
+    "table4_scaling",
+    "fig3_tier_count",
+    "fig_async_timeline",
+    "table5_privacy",
+    "roofline",
+]
 
-def main() -> None:
-    from benchmarks import (fig3_tier_count, fig_async_timeline, roofline,
-                            table1_tier_times, table2_normalized,
-                            table3_baselines, table4_scaling, table5_privacy)
 
-    suites = [
-        ("table1_tier_times", table1_tier_times.main),
-        ("table2_normalized", table2_normalized.main),
-        ("table3_baselines", table3_baselines.main),
-        ("table4_scaling", table4_scaling.main),
-        ("fig3_tier_count", fig3_tier_count.main),
-        ("fig_async_timeline", fig_async_timeline.main),
-        ("table5_privacy", table5_privacy.main),
-        ("roofline", roofline.main),
-    ]
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite subset (e.g. "
+                         "table4_scaling,roofline); default: all")
+    args = ap.parse_args(argv)
+    selected = SUITES
+    if args.only:
+        names = [s.strip() for s in args.only.split(",") if s.strip()]
+        bad = [n for n in names if n not in SUITES]
+        if bad:
+            ap.error(f"unknown suite(s) {bad}; choose from {sorted(SUITES)}")
+        selected = [s for s in SUITES if s in names]
+
     failures = 0
-    for name, fn in suites:
+    for name in selected:
         t0 = time.time()
         print(f"### {name}")
         try:
-            fn()
+            # import lazily so subset runs don't pay every suite's (jax-
+            # heavy) import cost
+            importlib.import_module(f"benchmarks.{name}").main()
             print(f"### {name} done in {time.time()-t0:.1f}s")
         except Exception as e:  # noqa: BLE001
             failures += 1

@@ -1,29 +1,43 @@
-"""Paper Table 4: scaling the client count, plus the cohort-engine sweep.
+"""Paper Table 4: scaling the client count, plus the engine/plane sweeps.
 
-Reproduces two claims:
+Reproduces three claims:
 
 * (paper, Table 4) increasing the pool does not hurt DTFL; its simulated
   time-to-target stays far below FedAvg at every scale.
   CSV rows: ``table4,<n_clients>,<method>,<sim_clock_s>,<acc>``
 * (engine) the tier-cohort vectorized round engine (fed/cohort.py) beats the
-  per-client sequential loop on real round wall-time, >=5x at 100+ clients
-  on CPU — O(n_tiers) device programs per round instead of
+  per-client sequential loop on real round wall-time (~3.5x at 100 clients
+  on this 2-core container under honest block-until-ready timing; grows
+  with n) — O(n_tiers) device programs per round instead of
   O(n_clients x n_batches) dispatches.
-  CSV rows: ``table4_wall,<n_clients>,<engine>,<round_wall_s>`` followed by
+  CSV rows: ``table4_wall,<n_clients>,<exec>,<round_wall_s>`` followed by
   ``table4_speedup,<n_clients>,<x_speedup>``
+* (sharded plane) sharding each cohort's client axis over a device mesh
+  (fed/execplan.py) cuts round wall-time as the device count grows —
+  the ``--xla_force_host_platform_device_count`` sim devices stand in for
+  real accelerators; gains saturate at the PHYSICAL core count (a 2-core
+  host shows d1 > d2 ≈ d4).
+  CSV rows: ``table4_wall,<n_clients>,sharded_d<d>,<round_wall_s>`` and
+  ``table4_shard_speedup,<n_clients>,<d>,<x_vs_single_device_cohort>``
+  (emitted only for device counts actually visible to jax).
 
-Run directly (``python benchmarks/table4_scaling.py [--full]``) for the
-10->500-client sweep; ``--full`` adds the largest sizes.
+Run directly (``python benchmarks/table4_scaling.py [--full] [--devices N]``)
+for the 10->500-client sweep; ``--devices N`` forces N simulated host
+devices (must be set at launch, before jax initializes).
 """
 from __future__ import annotations
 
+import sys
 import time
-
-from benchmarks.common import image_setup, run_method
 
 
 def main(emit_fn=print, rounds=8, target=0.5, sizes=(10, 20, 50),
-         wall_sizes=(10, 50, 100), wall_timed_rounds=2, wall_warmup_rounds=3):
+         wall_sizes=(10, 50, 100), wall_timed_rounds=2, wall_warmup_rounds=3,
+         shard_devices=(2, 4)):
+    import jax
+
+    from benchmarks.common import image_setup, run_method
+
     out = []
     # ---- paper claim: simulated time-to-target vs pool size ---------------
     for n in sizes:
@@ -34,22 +48,41 @@ def main(emit_fn=print, rounds=8, target=0.5, sizes=(10, 20, 50),
                               target=target, participation=part)
             out.append(("table4", n, method, round(logs[-1].clock),
                         round(logs[-1].acc, 3)))
-    # ---- engine claim: round wall-time, sequential loop vs cohort engine --
+    # ---- engine claim: round wall-time, loop vs cohort vs sharded ---------
+    avail = len(jax.devices())
+    usable = [d for d in shard_devices if d <= avail]
+    dropped = [d for d in shard_devices if d > avail]
+    if dropped:
+        # stderr: stdout is the machine-parseable CSV stream
+        print(f"table4: skipping sharded d={dropped} (only {avail} device(s) "
+              "visible; set XLA_FLAGS=--xla_force_host_platform_device_count)",
+              file=sys.stderr)
     for n in wall_sizes:
         walls = {}
-        for engine in ("loop", "cohort"):
-            walls[engine] = _round_walltime(
-                n, cohort=(engine == "cohort"),
+        for mode in ("loop", "cohort"):
+            walls[mode] = _round_walltime(
+                n, exec_plan=mode,
                 timed_rounds=wall_timed_rounds, warmup_rounds=wall_warmup_rounds,
             )
-            out.append(("table4_wall", n, engine, round(walls[engine], 3)))
+            out.append(("table4_wall", n, mode, round(walls[mode], 3)))
         out.append(("table4_speedup", n, round(walls["loop"] / walls["cohort"], 1)))
+        for d in usable:
+            from repro.fed import ExecPlan
+            from repro.launch.mesh import make_sim_mesh
+
+            t = _round_walltime(
+                n, exec_plan=ExecPlan.sharded(make_sim_mesh(d)),
+                timed_rounds=wall_timed_rounds, warmup_rounds=wall_warmup_rounds,
+            )
+            out.append(("table4_wall", n, f"sharded_d{d}", round(t, 3)))
+            out.append(("table4_shard_speedup", n, d,
+                        round(walls["cohort"] / t, 2)))
     for r in out:
         emit_fn(",".join(str(x) for x in r))
     return out
 
 
-def _round_walltime(n_clients: int, *, cohort: bool, timed_rounds: int,
+def _round_walltime(n_clients: int, *, exec_plan, timed_rounds: int,
                     warmup_rounds: int, samples_per_client: int = 64,
                     batch: int = 8) -> float:
     """Steady-state wall-time of one full-participation DTFL round.
@@ -63,6 +96,7 @@ def _round_walltime(n_clients: int, *, cohort: bool, timed_rounds: int,
     the cohort shapes — stabilize after a few rounds)."""
     import dataclasses
 
+    import jax
     import numpy as np
 
     from repro import optim
@@ -82,19 +116,38 @@ def _round_walltime(n_clients: int, *, cohort: bool, timed_rounds: int,
     adapter = ResNetAdapter(cfg, cost_cfg=None)
     env = HeteroEnv(n_clients, switch_every=0, seed=0)
     tr = DTFLTrainer(adapter, clients, env, optim.adam(1e-3), seed=0,
-                     cohort=cohort)
+                     exec_plan=exec_plan)
     participants = list(range(n_clients))
     for r in range(warmup_rounds):
         tr.train_round(r, participants)
+    # block: jax dispatch is async, so un-synced timings under-count device
+    # work (PR 3 made this honest for every execution plane)
+    jax.block_until_ready(tr.params)
     t0 = time.perf_counter()
     for r in range(warmup_rounds, warmup_rounds + timed_rounds):
         tr.train_round(r, participants)
+        jax.block_until_ready(tr.params)
     return (time.perf_counter() - t0) / timed_rounds
 
 
 if __name__ == "__main__":
-    import sys
+    import argparse
 
-    full = "--full" in sys.argv
-    main(sizes=(10, 20, 50), wall_sizes=(10, 50, 100, 200, 500) if full
-         else (10, 50, 100))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="simulated host devices for the sharded sweep")
+    args = ap.parse_args()
+    shard_devices = (2, 4)
+    if args.devices and args.devices > 1:
+        # must precede first jax backend init (all repro imports are lazy);
+        # ensure_sim_devices dedupes the flag and validates the device count
+        from repro.launch.mesh import ensure_sim_devices
+
+        ensure_sim_devices(args.devices)
+        # sweep up to (and including) the forced device count
+        shard_devices = tuple(sorted(
+            {d for d in (2, 4) if d < args.devices} | {args.devices}
+        ))
+    main(sizes=(10, 20, 50), wall_sizes=(10, 50, 100, 200, 500) if args.full
+         else (10, 50, 100), shard_devices=shard_devices)

@@ -1,12 +1,23 @@
 """Pytree checkpointing via .npz (no orbax in the container).
 
-Flattens arbitrary dict/list/tuple pytrees with '/'-joined key paths;
-restores exact structure from a treedef-free path encoding. Scalars and
-numpy/jax arrays round-trip; dtypes preserved.
+Flattens arbitrary dict/list/tuple/NamedTuple pytrees with '/'-joined key
+paths; restores exact structure from a treedef-free path encoding. Scalars
+and numpy/jax arrays round-trip; dtypes preserved.
+
+NamedTuples (``DTFLState``, optimizer ``Optimizer`` pairs, step states) are
+encoded with their import path (``n[module.QualName]:i``) and reconstructed
+as the ORIGINAL class on load, so ``load(save(x))`` preserves the jax pytree
+structure — a plain-tuple round trip would silently change the treedef and
+break e.g. ``jax.tree.map(params, restored)``.
+
+Also hosts :func:`pack_rng` / :func:`unpack_rng`: lossless (de)serialization
+of ``np.random.Generator`` (PCG64) state as a uint64 vector, used by the
+resumable-training envelope so a resumed run continues the exact participant
+sampling stream of an uninterrupted one.
 """
 from __future__ import annotations
 
-import io
+import importlib
 import os
 import tempfile
 from typing import Any
@@ -15,18 +26,47 @@ import jax
 import numpy as np
 
 
+def _nt_tag(tree) -> str:
+    cls = type(tree)
+    return f"n[{cls.__module__}.{cls.__qualname__}]"
+
+
+# marker child recording an EMPTY container — without it an empty dict/list/
+# tuple field contributes no paths and silently vanishes (shifting NamedTuple
+# fields) on load. Collides only with a literal dict key "__empty__".
+_EMPTY = "__empty__"
+
+
 def _flatten(tree: Any, prefix: str = "") -> dict[str, np.ndarray]:
     out: dict[str, np.ndarray] = {}
     if isinstance(tree, dict):
+        if not tree:
+            out[f"{prefix}d:{_EMPTY}"] = np.zeros(0, np.uint8)
         for k in sorted(tree):
             out.update(_flatten(tree[k], f"{prefix}d:{k}/"))
+    elif isinstance(tree, tuple) and hasattr(tree, "_fields"):  # NamedTuple
+        tag = _nt_tag(tree)
+        if not tree:
+            out[f"{prefix}{tag}:{_EMPTY}"] = np.zeros(0, np.uint8)
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{tag}:{i}/"))
     elif isinstance(tree, (list, tuple)):
         tag = "l" if isinstance(tree, list) else "t"
+        if not tree:
+            out[f"{prefix}{tag}:{_EMPTY}"] = np.zeros(0, np.uint8)
         for i, v in enumerate(tree):
             out.update(_flatten(v, f"{prefix}{tag}:{i}/"))
     else:
         out[prefix.rstrip("/")] = np.asarray(tree)
     return out
+
+
+def _resolve_namedtuple(path: str):
+    mod, _, qual = path.rpartition(".")
+    obj = importlib.import_module(mod)
+    for part in qual.split("."):
+        obj = getattr(obj, part)
+    return obj
 
 
 def _unflatten(flat: dict[str, np.ndarray]) -> Any:
@@ -51,11 +91,22 @@ def _unflatten(flat: dict[str, np.ndarray]) -> Any:
         kinds = {k.split(":", 1)[0] for k in node}
         assert len(kinds) == 1, f"mixed node kinds: {sorted(node)}"
         kind = kinds.pop()
-        if kind == "d":
+        if set(node) == {f"{kind}:{_EMPTY}"}:
+            seq = []                       # empty-container marker
+        elif kind == "d":
             return {k.split(":", 1)[1]: build(v) for k, v in node.items()}
-        items = sorted(node.items(), key=lambda kv: int(kv[0].split(":", 1)[1]))
-        seq = [build(v) for _, v in items]
-        return seq if kind == "l" else tuple(seq)
+        else:
+            items = sorted(node.items(), key=lambda kv: int(kv[0].split(":", 1)[1]))
+            seq = [build(v) for _, v in items]
+        if kind == "d":
+            return {}
+        if kind == "l":
+            return seq
+        if kind == "t":
+            return tuple(seq)
+        assert kind.startswith("n[") and kind.endswith("]"), f"bad node kind {kind!r}"
+        cls = _resolve_namedtuple(kind[2:-1])
+        return cls(*seq)
 
     return build(root)
 
@@ -79,3 +130,35 @@ def load(path: str) -> Any:
     with np.load(path, allow_pickle=False) as z:
         flat = {k: z[k] for k in z.files}
     return _unflatten(flat)
+
+
+# ---------------------------------------------------------------------------
+# numpy Generator state <-> uint64 vector (for resumable training envelopes)
+# ---------------------------------------------------------------------------
+
+_MASK64 = (1 << 64) - 1
+
+
+def pack_rng(gen: np.random.Generator) -> np.ndarray:
+    """Serialize a PCG64 Generator's full state as shape-(6,) uint64."""
+    st = gen.bit_generator.state
+    if st["bit_generator"] != "PCG64":
+        raise ValueError(f"only PCG64 generators supported, got {st['bit_generator']}")
+    s, inc = st["state"]["state"], st["state"]["inc"]
+    return np.array(
+        [s >> 64, s & _MASK64, inc >> 64, inc & _MASK64,
+         st["has_uint32"], st["uinteger"]],
+        dtype=np.uint64,
+    )
+
+
+def unpack_rng(arr) -> np.random.Generator:
+    """Rebuild the Generator serialized by :func:`pack_rng` (exact stream)."""
+    a = [int(x) for x in np.asarray(arr).reshape(-1)]
+    gen = np.random.default_rng(0)
+    gen.bit_generator.state = {
+        "bit_generator": "PCG64",
+        "state": {"state": (a[0] << 64) | a[1], "inc": (a[2] << 64) | a[3]},
+        "has_uint32": a[4], "uinteger": a[5],
+    }
+    return gen

@@ -53,6 +53,31 @@ def weighted_average_cohorts(stacked_trees: list[Params], weights: list) -> Para
     return _wavg_cohorts(stacked_trees, ws)
 
 
+@jax.jit
+def _combine_sums(sums: list, totals: list, like: Params):
+    total = totals[0]
+    for t in totals[1:]:
+        total = total + t
+    acc = sums[0]
+    for s in sums[1:]:
+        acc = jax.tree.map(lambda a, x: a + x, acc, s)
+    return jax.tree.map(lambda a, p: (a / total).astype(p.dtype), acc, like)
+
+
+def combine_weighted_sums(sums: list[Params], totals: list, like: Params) -> Params:
+    """Finalize per-cohort weighted SUMS into the global weighted average.
+
+    The sharded plane's cohort programs reduce their client axis on-device
+    (``psum`` of ``tensordot(w, x)`` partials + ``psum`` of ``w.sum()``); the
+    host only ever sees one (sum_tree, weight_total) pair per cohort. This
+    mirrors ``_wavg_cohorts`` exactly — same per-cohort partials, same
+    cohort-order accumulation, same single division — so a 1-shard mesh
+    reproduces the cohort plane bit-for-bit. ``like`` supplies output dtypes.
+    """
+    totals = [jnp.asarray(t, jnp.float32) for t in totals]
+    return _combine_sums(sums, totals, like)
+
+
 def aggregate_dtfl_round(cfg, tier_states: list[tuple[int, Params, Params]],
                          weights: list[float]) -> Params:
     """tier_states: [(tier, client_params, server_params)] per client."""

@@ -16,6 +16,7 @@ from repro.fed import cohort as cohort_engine
 from repro.fed import engine as event_engine
 from repro.fed.client import HeteroEnv, SimClient
 from repro.fed.engine import RoundLog, RoundPlan
+from repro.fed.execplan import ExecPlan
 
 
 def kd_loss(student_logits: jax.Array, teacher_logits: jax.Array, temp: float = 1.0) -> jax.Array:
@@ -39,14 +40,16 @@ class BaseTrainer:
 
     def __init__(self, adapter, clients: list[SimClient], env: HeteroEnv, optimizer,
                  *, seed: int = 0, local_epochs: int = 1,
-                 server_flops: float = timemodel.SERVER_FLOPS, cohort: bool = True):
+                 server_flops: float = timemodel.SERVER_FLOPS,
+                 exec_plan: ExecPlan | str | None = None):
         self.adapter = adapter
         self.clients = clients
         self.env = env
         self.opt = optimizer
         self.local_epochs = local_epochs
         self.server_flops = server_flops
-        self.cohort = cohort
+        # "loop" | "cohort" | "sharded[mesh]" — replaces the old cohort bool
+        self.exec_plan = ExecPlan.resolve(exec_plan)
         self.key = jax.random.PRNGKey(seed)
         self.params = adapter.init_global(self._next_key())
         self.costs = adapter.tier_costs(clients[0].dataset.batch_size)
@@ -111,16 +114,48 @@ class BaseTrainer:
         )
         return float(plan.times.max()) + extra
 
+    # ------------------------------------------------------------------
+    # resumable training state (engine.save_train_state envelope body)
+    # ------------------------------------------------------------------
+    def save_state(self) -> dict:
+        """Everything a deterministic resume needs: params, the trainer's jax
+        RNG key, and the env's profile state. Subclasses with extra server
+        state (FedYogi's optimizer, DTFL's aux heads / scheduler) extend."""
+        return {"params": self.params, "key": np.asarray(self.key),
+                "env": self.env.save_state()}
+
+    def load_state(self, state: dict) -> None:
+        self.params = state["params"]
+        if "key" in state:
+            self.key = jnp.asarray(state["key"])
+        if "env" in state:
+            self.env.load_state(state["env"])
+
+    def save(self, path: str) -> None:
+        from repro import checkpoint as ckpt
+
+        ckpt.save(path, self.save_state())
+
+    def restore(self, path: str) -> None:
+        """Load trainer state from ``path`` — either a bare ``save()`` state
+        or a ``fed.engine.save_train_state`` resume envelope (unwrapped)."""
+        event_engine.restore_trainer(self, path)
+
     def run(self, n_rounds: int, eval_batch: dict, *, target_acc: float | None = None,
             participation: float = 1.0, eval_every: int = 1, verbose: bool = False,
             engine: str = "rounds", churn=None, n_groups: int = 3,
+            checkpoint_path: str | None = None, checkpoint_every: int = 10,
+            resume: dict | None = None,
             ) -> list[RoundLog]:
+        common = dict(
+            target_acc=target_acc, participation=participation,
+            eval_every=eval_every, verbose=verbose,
+            checkpoint_path=checkpoint_path, checkpoint_every=checkpoint_every,
+            resume=resume,
+        )
         if engine == "events":
             return event_engine.run_events(
-                self, n_rounds, eval_batch, target_acc=target_acc,
-                participation=participation, eval_every=eval_every,
-                verbose=verbose, churn=churn,
-            )
+                self, n_rounds, eval_batch, churn=churn, **common)
         if engine == "async":
             if not self.supports_async:
                 raise ValueError(
@@ -129,29 +164,11 @@ class BaseTrainer:
                     "engine='rounds' or 'events', or use method 'fedat'"
                 )
             return event_engine.run_async(
-                self, n_rounds, eval_batch, target_acc=target_acc,
-                participation=participation, eval_every=eval_every,
-                verbose=verbose, churn=churn, n_groups=n_groups,
-            )
+                self, n_rounds, eval_batch, churn=churn, n_groups=n_groups,
+                **common)
         if engine != "rounds":
             raise ValueError(f"unknown engine {engine!r}")
-        rng = np.random.default_rng(0)
-        eval_batch = {k: jnp.asarray(v) for k, v in eval_batch.items()}
-        eval_fn = jax.jit(self.adapter.eval_acc)
-        clock, logs = 0.0, []
-        n_part = max(1, int(participation * len(self.clients)))
-        for r in range(n_rounds):
-            participants = sorted(rng.choice(len(self.clients), n_part, replace=False).tolist())
-            straggler = self.train_round(r, participants)
-            clock += straggler
-            acc = float(eval_fn(self.params, eval_batch)) if r % eval_every == 0 else (
-                logs[-1].acc if logs else 0.0)
-            logs.append(RoundLog(r, clock, acc, {}, straggler))
-            if verbose:
-                print(f"[{self.name}] r={r} clock={clock:.0f}s acc={acc:.3f}")
-            if target_acc is not None and acc >= target_acc:
-                break
-        return logs
+        return event_engine.run_rounds(self, n_rounds, eval_batch, **common)
 
     # ------------------------------------------------------------------
     # time helpers (analytic, from the shared cost table)
@@ -185,29 +202,52 @@ class BaseTrainer:
         return params
 
     # ------------------------------------------------------------------
-    # cohort engine path (same math as _local_full_steps, vectorized)
+    # cohort / sharded engine paths (same math as _local_full_steps)
     # ------------------------------------------------------------------
+    def _full_step_fn(self):
+        """Single-client full-model step (unjitted; lifted by run_cohort)."""
+        ad, opt = self.adapter, self.opt
+
+        def step(state, batch):
+            loss, g = jax.value_and_grad(
+                lambda q: ad.full_loss(q, batch)
+            )(state["p"])
+            p, o = opt.update(state["p"], g, state["o"])
+            return {"p": p, "o": o}, loss
+
+        return step
+
     def _train_round_full(self, r: int, cids: list[int]):
         """Full-model local training for every client in ``cids`` followed by
         the N_k/N weighted average; returns the aggregated params.
 
-        With ``cohort=True`` the clients run as vectorized shape-bucketed
-        cohorts — one jitted program each (optimizer init + vmap+scan fused
-        on device) and a stacked aggregation; otherwise the per-client loop.
+        ExecPlan dispatch: ``cohort`` runs vectorized shape-bucketed cohorts
+        — one jitted program each (optimizer init + vmap+scan fused on
+        device) and a stacked aggregation; ``sharded`` splits each cohort's
+        client axis over the plan's mesh and reduces the weighted sums
+        on-device (psum); ``loop`` is the per-client debug path.
         """
         weigh = lambda k: len(self.clients[k].dataset)
-        if not self.cohort:
+        if self.exec_plan.mode == "loop":
             locals_ = [self._local_full_steps(r, k, self.params) for k in cids]
             return aggregation.weighted_average(locals_, [weigh(k) for k in cids])
+        tier_of = {k: 0 for k in cids}  # untired: bucket by batch shape only
+        cohorts = cohort_engine.build_cohorts(
+            self.clients, cids, tier_of, r, self.local_epochs,
+            pad_multiple=self.exec_plan.pad_multiple,
+        )
+        if self.exec_plan.mode == "sharded":
+            sums, totals = [], []
+            for co in cohorts:
+                s, t = self._full_sharded_program()(
+                    self.params, co.batches, co.mask,
+                    co.client_weights(self.clients),
+                )
+                sums.append(s)
+                totals.append(t)
+            return aggregation.combine_weighted_sums(sums, totals, like=self.params)
         if not hasattr(self, "_full_cohort_program"):
-            ad, opt = self.adapter, self.opt
-
-            def step(state, batch):
-                loss, g = jax.value_and_grad(
-                    lambda q: ad.full_loss(q, batch)
-                )(state["p"])
-                p, o = opt.update(state["p"], g, state["o"])
-                return {"p": p, "o": o}, loss
+            step, opt = self._full_step_fn(), self.opt
 
             @jax.jit
             def run(params, batches, mask):
@@ -217,10 +257,24 @@ class BaseTrainer:
 
             self._full_cohort_program = run
         trees, ws = [], []
-        tier_of = {k: 0 for k in cids}  # untired: bucket by batch shape only
-        for co in cohort_engine.build_cohorts(
-            self.clients, cids, tier_of, r, self.local_epochs
-        ):
+        for co in cohorts:
             trees.append(self._full_cohort_program(self.params, co.batches, co.mask))
             ws.append([weigh(k) for k in co.cids])
         return aggregation.weighted_average_cohorts(trees, ws)
+
+    def _full_sharded_program(self):
+        """One jitted shard_map program: the full-model cohort scan with its
+        client axis split over the plan's mesh; the N_k-weighted parameter
+        sum and the weight total leave the device pre-reduced (psum), so
+        per-client trees never materialize on host."""
+        if not hasattr(self, "_full_sharded"):
+            step, opt, plan = self._full_step_fn(), self.opt, self.exec_plan
+
+            def local(params, batches, mask, weights):
+                state = {"p": params, "o": opt.init(params)}
+                final, _ = cohort_engine.run_cohort(step, state, batches, mask)
+                return (plan.psum_tree(final["p"], scaled_by=weights),
+                        plan.psum_scalar(weights.sum()))
+
+            self._full_sharded = jax.jit(plan.shard_cohort_call(local, n_replicated=1))
+        return self._full_sharded

@@ -67,6 +67,24 @@ class HeteroEnv:
     def profile(self, cid: int) -> ResourceProfile:
         return self.profiles[self.assignment[cid]]
 
+    # ------------------------------------------------------------------
+    # resumable-training state (profile assignment + the switch rng stream)
+    # ------------------------------------------------------------------
+    def save_state(self) -> dict:
+        from repro import checkpoint as ckpt
+
+        switched = np.array(sorted(self._switched_rounds), dtype=np.int64)
+        return {"assignment": self.assignment.copy(),
+                "rng": ckpt.pack_rng(self.rng),
+                "switched": switched}
+
+    def load_state(self, state: dict) -> None:
+        from repro import checkpoint as ckpt
+
+        self.assignment = np.asarray(state["assignment"]).copy()
+        self.rng = ckpt.unpack_rng(state["rng"])
+        self._switched_rounds = {int(r) for r in np.asarray(state["switched"]).reshape(-1)}
+
 
 class ChurnModel:
     """Client churn for the event engine: dropout, arrival, mid-round switches.

@@ -44,22 +44,35 @@ class Cohort:
 
     tier: int
     cids: list[int]                # participant ids, stacking order
-    batches: dict                  # name -> (n_steps, n_clients, batch, ...)
-    mask: np.ndarray               # (n_steps, n_clients) bool; False = padded
+    batches: dict                  # name -> (n_steps, n_clients + n_pad, batch, ...)
+    mask: np.ndarray               # (n_steps, n_clients + n_pad) bool; False = padded
+    n_pad: int = 0                 # trailing pad clients (sharded divisibility)
 
     @property
     def size(self) -> int:
         return len(self.cids)
 
+    def client_weights(self, clients) -> np.ndarray:
+        """(size + n_pad,) f32 aggregation weights: N_k for real members, 0
+        for pad clients — so on-device weighted sums ignore padding exactly."""
+        w = [float(len(clients[k].dataset)) for k in self.cids] + [0.0] * self.n_pad
+        return np.asarray(w, np.float32)
+
 
 def build_cohorts(
-    clients, cids: list[int], tier_of: dict[int, int], r: int, local_epochs: int
+    clients, cids: list[int], tier_of: dict[int, int], r: int, local_epochs: int,
+    *, pad_multiple: int = 1,
 ) -> list[Cohort]:
     """Group ``cids`` into cohorts and stack their round-``r`` batches.
 
     ``tier_of`` maps cid -> tier (use a constant for untired full-model
     training). Batches come from ``materialize_round`` so they are
     bit-identical to what the sequential loop would consume.
+
+    ``pad_multiple > 1`` (the sharded plane's mesh axis size) pads each
+    cohort's client axis with zero-batch / all-False-mask / weight-0 pad
+    clients up to the next multiple, so ``shard_map`` can split the axis
+    evenly; pad clients never touch state (mask) or aggregation (weight).
     """
     per_client = {k: materialize_round(clients[k].dataset, r, local_epochs) for k in cids}
     groups: dict[tuple, list[int]] = {}
@@ -72,15 +85,22 @@ def build_cohorts(
     for (tier, _), members in groups.items():
         steps = np.array([len(next(iter(per_client[k].values()))) for k in members])
         s_max = int(steps.max())
+        n_pad = (-len(members)) % max(1, int(pad_multiple))
         names = per_client[members[0]].keys()
         batches = {}
         for name in names:
             stacked = np.stack(
                 [_pad_steps(per_client[k][name], s_max) for k in members], axis=1
             )  # (S, C, batch, ...)
+            if n_pad:
+                zeros = np.zeros(
+                    (s_max, n_pad) + stacked.shape[2:], stacked.dtype
+                )
+                stacked = np.concatenate([stacked, zeros], axis=1)
             batches[name] = stacked
-        mask = np.arange(s_max)[:, None] < steps[None, :]  # (S, C)
-        cohorts.append(Cohort(tier, members, batches, mask))
+        steps_padded = np.concatenate([steps, np.zeros(n_pad, steps.dtype)])
+        mask = np.arange(s_max)[:, None] < steps_padded[None, :]  # (S, C + pad)
+        cohorts.append(Cohort(tier, members, batches, mask, n_pad))
     return cohorts
 
 

@@ -6,8 +6,10 @@ Per round:
   2. Each tier's participants train as ONE vectorized cohort (fed.cohort):
      client-side + aux training and the server-side training on the uploaded
      z run inside a single jitted vmap+scan program per tier — O(n_tiers)
-     dispatches per round. ``cohort=False`` preserves the per-client
-     sequential loop for debugging.
+     dispatches per round. The trainer's :class:`~repro.fed.execplan.ExecPlan`
+     picks the execution plane: ``cohort`` (single device), ``sharded``
+     (client axis split over a device mesh, psum aggregation), or ``loop``
+     (per-client sequential debug path).
   3. Simulated wall-times per client come from the analytic time model and
      the client's ground-truth resource profile (vectorized over the round);
      the scheduler only observes the resulting times (+ the client-reported
@@ -30,6 +32,7 @@ from repro.fed import engine as event_engine
 from repro.fed.adapter import DTFLStepState
 from repro.fed.client import HeteroEnv, SimClient
 from repro.fed.engine import RoundLog, RoundPlan  # noqa: F401 (re-export)
+from repro.fed.execplan import ExecPlan
 
 
 class DTFLTrainer:
@@ -46,7 +49,7 @@ class DTFLTrainer:
         seed: int = 0,
         local_epochs: int = 1,
         server_flops: float = timemodel.SERVER_FLOPS,
-        cohort: bool = True,
+        exec_plan: ExecPlan | str | None = None,
     ):
         self.adapter = adapter
         self.clients = clients
@@ -75,9 +78,11 @@ class DTFLTrainer:
         self.aux = {
             m: adapter.aux_init(self._next_key(), m) for m in range(adapter.n_tiers)
         }
-        self.cohort = cohort
+        # "loop" | "cohort" | "sharded[mesh]" — replaces the old cohort bool
+        self.exec_plan = ExecPlan.resolve(exec_plan)
         self._step_cache: dict[int, callable] = {}
         self._cohort_cache: dict[int, callable] = {}
+        self._sharded_cache: dict[int, callable] = {}
 
     # ------------------------------------------------------------------
     def _next_key(self):
@@ -131,6 +136,33 @@ class DTFLTrainer:
             self._cohort_cache[tier] = run
         return self._cohort_cache[tier]
 
+    def _sharded_program(self, tier: int):
+        """The per-tier cohort program with its client axis split across the
+        ExecPlan's mesh via shard_map. Each shard trains its client slice
+        (split + opt init + vmapped scan + merge, exactly the cohort
+        program), then the cross-client FedAvg weighted sums — merged global
+        trees AND tier aux heads — reduce on-device as psum collectives;
+        only (sum_tree, aux_sum_tree, weight_total) leave the mesh."""
+        if tier not in self._sharded_cache:
+            ad, opt, plan = self.adapter, self.opt, self.exec_plan
+            step = self._raw_step(tier)
+
+            def local(params, aux, batches, mask, weights):
+                cp, sp = ad.split(params, tier)
+                state = DTFLStepState(
+                    cp, aux, sp, opt.init(cp), opt.init(aux), opt.init(sp)
+                )
+                final, _ = cohort_engine.run_cohort(step, state, batches, mask)
+                merged = jax.vmap(ad.merge)(final.client, final.server)
+                return (plan.psum_tree(merged, scaled_by=weights),
+                        plan.psum_tree(final.aux, scaled_by=weights),
+                        plan.psum_scalar(weights.sum()))
+
+            self._sharded_cache[tier] = jax.jit(
+                plan.shard_cohort_call(local, n_replicated=2)
+            )
+        return self._sharded_cache[tier]
+
     # ------------------------------------------------------------------
     # engine hooks (fed/engine.py contract): plan -> execute -> observe
     # ------------------------------------------------------------------
@@ -158,10 +190,7 @@ class DTFLTrainer:
     def execute_round(self, r: int, plan: RoundPlan, trained: list[int]) -> float:
         if not trained:
             return 0.0
-        if self.cohort:
-            self.params = self._train_cohorts(r, trained, plan.assign)
-        else:
-            self.params = self._train_sequential(r, trained, plan.assign)
+        self.params = self._train_participants(r, trained, plan.assign)
         return 0.0
 
     def observe_round(self, plan: RoundPlan, idx: list[int], obs_times, totals) -> None:
@@ -180,9 +209,17 @@ class DTFLTrainer:
         """Async-tier hook: group-local training that returns the aggregated
         tree (per-tier aggregation) instead of committing it, so the async
         merger can staleness-weight it across tiers."""
-        train = self._train_cohorts if self.cohort else self._train_sequential
-        tree = train(r, trained, plan.assign)
+        tree = self._train_participants(r, trained, plan.assign)
         return tree, float(sum(len(self.clients[k].dataset) for k in trained))
+
+    def _train_participants(self, r, participants, assign):
+        """ExecPlan dispatch: loop | cohort | sharded."""
+        mode = self.exec_plan.mode
+        if mode == "loop":
+            return self._train_sequential(r, participants, assign)
+        if mode == "sharded":
+            return self._train_sharded(r, participants, assign)
+        return self._train_cohorts(r, participants, assign)
 
     def async_groups(self, cids: list[int], n_groups: int) -> list[list[int]]:
         """Speed groups from the SCHEDULER's estimates (never ground truth):
@@ -226,6 +263,34 @@ class DTFLTrainer:
             )
         return aggregation.weighted_average_cohorts(merged_trees, merged_ws)
 
+    def _train_sharded(self, r, participants, assign):
+        """The cohort round with every cohort's client axis sharded over the
+        ExecPlan mesh. Cohorts pad to a multiple of the mesh axis (zero
+        batches, all-False mask, weight 0 — exact no-ops); each per-tier
+        program returns psum-reduced weighted sums, and the host only
+        combines one (sum, total) pair per cohort — identical math to
+        ``_train_cohorts``'s stacked aggregation, so a 1-device mesh is
+        bit-equal and an N-device mesh differs only by collective order."""
+        sums, totals = [], []
+        aux_by_tier: dict[int, list] = {}
+        cohorts = cohort_engine.build_cohorts(
+            self.clients, participants, assign, r, self.local_epochs,
+            pad_multiple=self.exec_plan.pad_multiple,
+        )
+        for co in cohorts:
+            w = co.client_weights(self.clients)
+            msum, asum, wtot = self._sharded_program(co.tier)(
+                self.params, self.aux[co.tier], co.batches, co.mask, w
+            )
+            sums.append(msum)
+            totals.append(wtot)
+            aux_by_tier.setdefault(co.tier, []).append((asum, wtot))
+        for tier, parts in aux_by_tier.items():
+            self.aux[tier] = aggregation.combine_weighted_sums(
+                [a for a, _ in parts], [t for _, t in parts], like=self.aux[tier]
+            )
+        return aggregation.combine_weighted_sums(sums, totals, like=self.params)
+
     def _train_sequential(self, r, participants, assign):
         """Per-client loop (debug escape hatch; O(clients x batches) dispatches)."""
         round_aux = dict(self.aux)  # cohort members share the round-start head
@@ -255,17 +320,16 @@ class DTFLTrainer:
 
     # ------------------------------------------------------------------
     # checkpointing (server state: global params + per-tier aux heads +
-    # scheduler EMA history)
+    # scheduler EMA history + jax RNG key + env profile state)
     # ------------------------------------------------------------------
-    def save(self, path: str) -> None:
-        from repro import checkpoint as ckpt
+    def save_state(self) -> dict:
         from repro.core.scheduler import DynamicTierScheduler
 
         state = {"params": self.params,
-                 "aux": {str(k): v for k, v in self.aux.items()}}
+                 "aux": {str(k): v for k, v in self.aux.items()},
+                 "key": np.asarray(self.key),
+                 "env": self.env.save_state()}
         if isinstance(self.sched, DynamicTierScheduler):
-            import numpy as np
-
             ema_t, ema_v = [], []
             for cid, cl in enumerate(self.sched.clients):
                 for tier, ema in cl.ema.items():
@@ -280,15 +344,17 @@ class DTFLTrainer:
                 "ema_keys": np.array(ema_t or [[0, 0]][:0]).reshape(-1, 2),
                 "ema_vals": np.array(ema_v),
             }
-        ckpt.save(path, state)
+        return state
 
-    def restore(self, path: str) -> None:
-        from repro import checkpoint as ckpt
+    def load_state(self, state: dict) -> None:
         from repro.core.scheduler import EMA, DynamicTierScheduler
 
-        state = ckpt.load(path)
         self.params = state["params"]
         self.aux = {int(k): v for k, v in state["aux"].items()}
+        if "key" in state:
+            self.key = jnp.asarray(state["key"])
+        if "env" in state:
+            self.env.load_state(state["env"])
         if "sched" in state and isinstance(self.sched, DynamicTierScheduler):
             sc = state["sched"]
             for cid, cl in enumerate(self.sched.clients):
@@ -301,6 +367,16 @@ class DTFLTrainer:
                 e = EMA()
                 e.value = float(v)
                 self.sched.clients[int(cid)].ema[int(tier)] = e
+
+    def save(self, path: str) -> None:
+        from repro import checkpoint as ckpt
+
+        ckpt.save(path, self.save_state())
+
+    def restore(self, path: str) -> None:
+        """Load trainer state from ``path`` — either a bare ``save()`` state
+        or a ``fed.engine.save_train_state`` resume envelope (unwrapped)."""
+        event_engine.restore_trainer(self, path)
 
     # ------------------------------------------------------------------
     def run(
@@ -317,44 +393,21 @@ class DTFLTrainer:
         engine: str = "rounds",
         churn=None,
         n_groups: int = 3,
+        resume: dict | None = None,
     ) -> list[RoundLog]:
+        common = dict(
+            target_acc=target_acc, participation=participation,
+            eval_every=eval_every, verbose=verbose,
+            checkpoint_path=checkpoint_path, checkpoint_every=checkpoint_every,
+            resume=resume,
+        )
         if engine == "events":
             return event_engine.run_events(
-                self, n_rounds, eval_batch, target_acc=target_acc,
-                participation=participation, eval_every=eval_every,
-                verbose=verbose, churn=churn,
-                checkpoint_path=checkpoint_path, checkpoint_every=checkpoint_every,
-            )
+                self, n_rounds, eval_batch, churn=churn, **common)
         if engine == "async":
             return event_engine.run_async(
-                self, n_rounds, eval_batch, target_acc=target_acc,
-                participation=participation, eval_every=eval_every,
-                verbose=verbose, churn=churn, n_groups=n_groups,
-                checkpoint_path=checkpoint_path, checkpoint_every=checkpoint_every,
-            )
+                self, n_rounds, eval_batch, churn=churn, n_groups=n_groups,
+                **common)
         if engine != "rounds":
             raise ValueError(f"unknown engine {engine!r}")
-        rng = np.random.default_rng(0)
-        eval_batch = {k: jnp.asarray(v) for k, v in eval_batch.items()}
-        eval_fn = jax.jit(self.adapter.eval_acc)
-        clock, logs = 0.0, []
-        n_part = max(1, int(participation * len(self.clients)))
-        for r in range(n_rounds):
-            participants = sorted(
-                rng.choice(len(self.clients), n_part, replace=False).tolist()
-            )
-            straggler, assign = self.train_round(r, participants)
-            clock += straggler
-            acc = float(eval_fn(self.params, eval_batch)) if r % eval_every == 0 else (
-                logs[-1].acc if logs else 0.0
-            )
-            logs.append(RoundLog(r, clock, acc, assign, straggler))
-            if verbose:
-                print(f"[dtfl] r={r} clock={clock:.0f}s acc={acc:.3f} tiers={sorted(set(assign.values()))}")
-            if checkpoint_path and (r + 1) % checkpoint_every == 0:
-                self.save(checkpoint_path)
-            if target_acc is not None and acc >= target_acc:
-                break
-        if checkpoint_path:
-            self.save(checkpoint_path)
-        return logs
+        return event_engine.run_rounds(self, n_rounds, eval_batch, **common)

@@ -94,6 +94,120 @@ def _participants_rng() -> np.random.Generator:
     return np.random.default_rng(0)
 
 
+# ---------------------------------------------------------------------------
+# resumable training state (train.py --save-every / --out-ckpt / --resume)
+# ---------------------------------------------------------------------------
+
+# the rounds and events engines share round/clock/rng semantics, so their
+# envelopes resume interchangeably; async envelopes count merges, not rounds
+_SYNC_ENGINES = frozenset({"rounds", "events"})
+
+
+def save_train_state(path: str, trainer, *, round_: int, clock: float,
+                     rng: np.random.Generator | None = None,
+                     acc: float = 0.0, engine: str = "rounds") -> None:
+    """Checkpoint the FULL run state as one envelope: the trainer's state
+    (params, per-tier aux heads, optimizer states, scheduler history, jax
+    RNG key, env profile state) plus the loop cursor (next round, virtual
+    clock, last evaluated accuracy — non-eval rounds carry it forward, so
+    target_acc early-stops stay resume-invariant), the participant-sampling
+    numpy rng stream, and the originating engine (async envelopes count
+    merges, not rounds, and must not resume a sync loop) — everything a
+    resumed run needs to continue bit-for-bit where it left off."""
+    from repro import checkpoint as ckpt
+
+    state = {"round": np.int64(round_), "clock": np.float64(clock),
+             "acc": np.float64(acc), "engine": engine,
+             "trainer": trainer.save_state()}
+    if rng is not None:
+        state["rng"] = ckpt.pack_rng(rng)
+    ckpt.save(path, state)
+
+
+def apply_resume(trainer, resume: dict, rng: np.random.Generator,
+                 *, engine: str) -> tuple[int, float, float]:
+    """Restore a :func:`save_train_state` envelope into ``trainer`` and the
+    caller's participant rng (mutated in place so the stream continues);
+    returns (start_round, start_clock, last_acc). Rejects envelopes whose
+    originating engine is incompatible with ``engine``."""
+    from repro import checkpoint as ckpt
+
+    src = str(resume["engine"]) if "engine" in resume else None
+    if src is not None and not (src in _SYNC_ENGINES and engine in _SYNC_ENGINES):
+        raise ValueError(
+            f"checkpoint was written by engine={src!r}; it cannot resume a "
+            f"run under engine={engine!r} (round counters and rng streams "
+            "are engine-specific)")
+    trainer.load_state(resume["trainer"])
+    if "rng" in resume:
+        rng.bit_generator.state = ckpt.unpack_rng(resume["rng"]).bit_generator.state
+    return (int(resume["round"]), float(resume["clock"]),
+            float(resume.get("acc", 0.0)))
+
+
+def restore_trainer(trainer, path: str) -> None:
+    """Load trainer state from ``path`` — a bare ``save_state()`` dump or a
+    :func:`save_train_state` envelope (unwrapped). Shared by every
+    trainer's ``restore``."""
+    from repro import checkpoint as ckpt
+
+    state = ckpt.load(path)
+    trainer.load_state(state["trainer"] if "trainer" in state else state)
+
+
+def run_rounds(
+    trainer,
+    n_rounds: int,
+    eval_batch: dict,
+    *,
+    target_acc: float | None = None,
+    participation: float = 1.0,
+    eval_every: int = 1,
+    verbose: bool = False,
+    checkpoint_path: str | None = None,
+    checkpoint_every: int = 10,
+    resume: dict | None = None,
+) -> list[RoundLog]:
+    """The legacy scalar-clock synchronous loop, shared by every trainer
+    (``run(engine="rounds")``): sample participants, ``train_round``,
+    accumulate the straggler clock, eval/log, checkpoint. DTFL's
+    ``train_round`` returns ``(straggler, assign)``; full-model baselines
+    return the bare straggler."""
+    rng = _participants_rng()
+    eval_fn, eval_batch = _eval_setup(trainer, eval_batch)
+    clock, logs = 0.0, []
+    start_round, last_acc = 0, 0.0
+    if resume is not None:
+        start_round, clock, last_acc = apply_resume(
+            trainer, resume, rng, engine="rounds")
+    next_round = start_round
+    n_part = max(1, int(participation * len(trainer.clients)))
+    for r in range(start_round, n_rounds):
+        participants = sorted(
+            rng.choice(len(trainer.clients), n_part, replace=False).tolist()
+        )
+        res = trainer.train_round(r, participants)
+        straggler, assign = res if isinstance(res, tuple) else (res, {})
+        clock += straggler
+        acc = float(eval_fn(trainer.params, eval_batch)) if r % eval_every == 0 else (
+            logs[-1].acc if logs else last_acc)
+        logs.append(RoundLog(r, clock, acc, assign, straggler))
+        next_round = r + 1
+        if verbose:
+            tiers = f" tiers={sorted(set(assign.values()))}" if assign else ""
+            print(f"[{trainer.name}] r={r} clock={clock:.0f}s acc={acc:.3f}{tiers}")
+        if checkpoint_path and (r + 1) % checkpoint_every == 0:
+            save_train_state(checkpoint_path, trainer, round_=r + 1,
+                             clock=clock, rng=rng, acc=acc)
+        if target_acc is not None and acc >= target_acc:
+            break
+    if checkpoint_path:
+        save_train_state(checkpoint_path, trainer, round_=next_round,
+                         clock=clock, rng=rng,
+                         acc=logs[-1].acc if logs else last_acc)
+    return logs
+
+
 def _eval_setup(trainer, eval_batch):
     eval_batch = {k: jnp.asarray(v) for k, v in eval_batch.items()}
     return jax.jit(trainer.adapter.eval_acc), eval_batch
@@ -115,6 +229,7 @@ def run_events(
     churn=None,
     checkpoint_path: str | None = None,
     checkpoint_every: int = 10,
+    resume: dict | None = None,
 ) -> list[RoundLog]:
     rng = _participants_rng()
     eval_fn, eval_batch = _eval_setup(trainer, eval_batch)
@@ -122,7 +237,18 @@ def run_events(
     logs: list[RoundLog] = []
     n_clients = len(trainer.clients)
 
-    for r in range(n_rounds):
+    start_round, last_acc = 0, 0.0
+    if resume is not None:
+        if churn is not None:
+            raise ValueError("resume with churn is unsupported (the churn "
+                             "model's offline/arrival state is not "
+                             "checkpointed); restart without --churn")
+        start_round, clock0, last_acc = apply_resume(
+            trainer, resume, rng, engine="events")
+        q.advance_to(clock0)
+    next_round = start_round
+
+    for r in range(start_round, n_rounds):
         pool = churn.begin_round(r) if churn is not None else np.arange(n_clients)
         n_part = max(1, min(len(pool), int(participation * n_clients)))
         participants = sorted(rng.choice(pool, n_part, replace=False).tolist())
@@ -196,19 +322,24 @@ def run_events(
         q.advance_to(round_end)
 
         acc = float(eval_fn(trainer.params, eval_batch)) if r % eval_every == 0 else (
-            logs[-1].acc if logs else 0.0
+            logs[-1].acc if logs else last_acc
         )
         logs.append(RoundLog(r, q.now, acc, plan.assign if hasattr(trainer, "sched") else {}, straggler))
+        next_round = r + 1
         if verbose:
             dropped = len(plan.trained) - len(trained)
             print(f"[events:{trainer.name}] r={r} clock={q.now:.0f}s acc={acc:.3f}"
                   + (f" dropped={dropped}" if dropped else ""))
         if checkpoint_path and (r + 1) % checkpoint_every == 0:
-            trainer.save(checkpoint_path)
+            save_train_state(checkpoint_path, trainer, round_=r + 1,
+                             clock=q.now, rng=rng, acc=acc, engine="events")
         if target_acc is not None and acc >= target_acc:
             break
     if checkpoint_path:
-        trainer.save(checkpoint_path)
+        save_train_state(checkpoint_path, trainer, round_=next_round,
+                         clock=q.now, rng=rng,
+                         acc=logs[-1].acc if logs else last_acc,
+                         engine="events")
     return logs
 
 
@@ -231,6 +362,7 @@ def run_async(
     max_merges: int | None = None,
     checkpoint_path: str | None = None,
     checkpoint_every: int = 10,
+    resume: dict | None = None,
 ) -> list[RoundLog]:
     """Async tier federation: ``n_rounds`` is a per-group wave budget, so the
     total merge budget is ``n_rounds * n_groups`` (comparable local work to
@@ -247,6 +379,10 @@ def run_async(
 
     ``checkpoint_every`` counts merges (the async analogue of rounds).
     """
+    if resume is not None:
+        raise ValueError("resume is supported for engine='rounds'/'events' "
+                         "only (the async engine's in-flight wave queue is "
+                         "not checkpointed)")
     rng = _participants_rng()
     eval_fn, eval_batch = _eval_setup(trainer, eval_batch)
     q = EventQueue()
@@ -359,11 +495,13 @@ def run_async(
                 print(f"[async:{trainer.name}] merge={merges} group={g} "
                       f"clock={q.now:.0f}s acc={acc:.3f}")
             if checkpoint_path and merges % checkpoint_every == 0:
-                trainer.save(checkpoint_path)
+                save_train_state(checkpoint_path, trainer, round_=merges,
+                                 clock=q.now, acc=acc, engine="async")
             if target_acc is not None and acc >= target_acc:
                 break
         wave_idx[g] += 1
         launch(g)
     if checkpoint_path:
-        trainer.save(checkpoint_path)
+        save_train_state(checkpoint_path, trainer, round_=merges, clock=q.now,
+                         acc=logs[-1].acc, engine="async")
     return logs

@@ -1,0 +1,141 @@
+"""ExecPlan: the explicit execution contract of the federation plane.
+
+PR 1/2 grew three ways to run a round's client computations — the per-client
+sequential loop, the vectorized tier-cohort programs, and (this PR) cohort
+programs sharded over a JAX device mesh — selected by an ad-hoc
+``cohort: bool`` flag on every trainer. ``ExecPlan`` replaces that flag with
+one value threaded from ``train.py --exec cohort|loop|sharded --devices N``
+through the trainers and both engines down to ``fed/cohort.py``:
+
+* ``mode`` — ``"loop"`` (per-client debug path), ``"cohort"`` (one vmap+scan
+  program per tier/shape bucket, single device), ``"sharded"`` (the same
+  cohort programs with their client axis split across ``mesh`` via
+  ``shard_map``; cross-client weighted sums become on-device ``psum``
+  collectives, so per-client parameter trees never travel to the host).
+* ``mesh`` / ``axis`` — the 1-D client-axis mesh (``launch.mesh.
+  make_sim_mesh``) and the name of its sharded axis.
+* ``pad_multiple`` — ragged cohorts pad their client axis up to a multiple
+  of the mesh's axis size (padded clients carry zero batches, an all-False
+  step mask, and weight 0, so they are exact no-ops).
+
+Helpers here are the only place that knows shard_map/PartitionSpec details;
+trainers compose them inside their jitted per-tier programs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+MODES = ("loop", "cohort", "sharded")
+
+
+@dataclass(frozen=True)
+class ExecPlan:
+    """Execution mode + mesh/shard/pad policy for one trainer."""
+
+    mode: str = "cohort"
+    mesh: Any = None          # jax.sharding.Mesh, required for mode="sharded"
+    axis: str = "clients"
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"unknown exec mode {self.mode!r}; pick from {MODES}")
+        if self.mode == "sharded" and self.mesh is None:
+            raise ValueError("ExecPlan(mode='sharded') needs a mesh; use "
+                             "ExecPlan.sharded(devices=N) or pass one from "
+                             "launch.mesh.make_sim_mesh")
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def loop(cls) -> "ExecPlan":
+        return cls(mode="loop")
+
+    @classmethod
+    def cohort(cls) -> "ExecPlan":
+        return cls(mode="cohort")
+
+    @classmethod
+    def sharded(cls, mesh=None, *, devices: int | None = None) -> "ExecPlan":
+        if mesh is None:
+            from repro.launch.mesh import make_sim_mesh
+
+            mesh = make_sim_mesh(devices)
+        (axis,) = mesh.axis_names
+        return cls(mode="sharded", mesh=mesh, axis=axis)
+
+    @classmethod
+    def from_flags(cls, exec_mode: str, *, devices: int | None = None) -> "ExecPlan":
+        """CLI adapter: ``--exec`` + ``--devices`` -> ExecPlan."""
+        if exec_mode == "sharded":
+            return cls.sharded(devices=devices)
+        return cls(mode=exec_mode)
+
+    @classmethod
+    def resolve(cls, plan: "ExecPlan | str | None") -> "ExecPlan":
+        """Trainer-ctor adapter: None -> cohort default, str -> mode name."""
+        if plan is None:
+            return cls.cohort()
+        if isinstance(plan, str):
+            return cls.from_flags(plan)
+        return plan
+
+    # ------------------------------------------------------------------
+    @property
+    def n_shards(self) -> int:
+        return 1 if self.mesh is None else self.mesh.shape[self.axis]
+
+    @property
+    def pad_multiple(self) -> int:
+        """Client-axis divisibility required by this plan's sharding."""
+        return self.n_shards if self.mode == "sharded" else 1
+
+    def describe(self) -> str:
+        if self.mode == "sharded":
+            return f"sharded[{self.axis}={self.n_shards}]"
+        return self.mode
+
+    # ------------------------------------------------------------------
+    # shard_map plumbing (the one place PartitionSpecs live)
+    # ------------------------------------------------------------------
+    def shard_cohort_call(self, local_fn, n_replicated: int = 0):
+        """Wrap ``local_fn(*replicated, batches, mask, weights) -> out`` so the
+        cohort arguments arrive client-sharded and the output replicated.
+
+        ``local_fn`` sees per-shard slices: batches ``(S, C/n, ...)``, mask
+        ``(S, C/n)``, weights ``(C/n,)``; it must reduce its outputs across
+        ``self.axis`` itself (``psum_tree`` / ``lax.psum``) so the replicated
+        out_specs hold. The first ``n_replicated`` arguments (global params,
+        tier aux heads, ...) are broadcast to every shard unchanged.
+        """
+        rep = (P(),) * n_replicated
+        return shard_map(
+            local_fn, mesh=self.mesh,
+            in_specs=rep + (P(None, self.axis), P(None, self.axis), P(self.axis)),
+            out_specs=P(),
+        )
+
+    def psum_tree(self, tree, scaled_by=None):
+        """On-device cross-shard reduction of a weighted-sum pytree."""
+        if scaled_by is not None:
+            tree = weighted_sum(tree, scaled_by)
+        return jax.tree.map(lambda x: jax.lax.psum(x, self.axis), tree)
+
+    def psum_scalar(self, x):
+        return jax.lax.psum(x, self.axis)
+
+
+def weighted_sum(tree, weights):
+    """Contract a pytree's leading client axis against ``weights`` (f32).
+
+    Exactly the per-cohort partial of ``core.aggregation._wavg_cohorts``
+    (``tensordot(w, x.astype(f32), axes=1)``), so the sharded plane's
+    host-side combine reproduces the cohort plane's math bit-for-bit on a
+    1-device mesh.
+    """
+    w = jnp.asarray(weights, jnp.float32)
+    return jax.tree.map(lambda x: jnp.tensordot(w, x.astype(jnp.float32), axes=1), tree)

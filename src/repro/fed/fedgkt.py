@@ -135,3 +135,32 @@ class FedGKTTrainer(BaseTrainer):
         self.aux = aggregation.weighted_average([a for _, a in client_updates], weights)
         self.params = self.adapter.merge(self.client_params, self.server_params)
         return server_time
+
+    # ------------------------------------------------------------------
+    # FedGKT's model lives OUTSIDE self.params (edge model, server model,
+    # aux head, server optimizer, per-(cid,batch) teacher-logit cache) —
+    # without these a --resume would silently restart from fresh weights
+    # ------------------------------------------------------------------
+    def save_state(self) -> dict:
+        state = super().save_state()
+        state["fedgkt"] = {
+            "client": self.client_params,
+            "server": self.server_params,
+            "aux": self.aux,
+            "server_opt": self.server_opt_state,
+            "teacher": {f"{c}:{b}": v for (c, b), v in self._teacher.items()},
+        }
+        return state
+
+    def load_state(self, state: dict) -> None:
+        super().load_state(state)
+        if "fedgkt" in state:
+            g = state["fedgkt"]
+            self.client_params = g["client"]
+            self.server_params = g["server"]
+            self.aux = g["aux"]
+            self.server_opt_state = g["server_opt"]
+            self._teacher = {}
+            for key, v in g["teacher"].items():
+                c, b = key.split(":")
+                self._teacher[(int(c), int(b))] = jnp.asarray(v)

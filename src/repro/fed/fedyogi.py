@@ -30,3 +30,14 @@ class FedYogiTrainer(BaseTrainer):
             self.params, pseudo_grad, self.server_opt_state
         )
         return 0.0
+
+    # persistent server-side optimizer state rides the resume envelope
+    def save_state(self) -> dict:
+        state = super().save_state()
+        state["server_opt"] = self.server_opt_state
+        return state
+
+    def load_state(self, state: dict) -> None:
+        super().load_state(state)
+        if "server_opt" in state:
+            self.server_opt_state = state["server_opt"]

@@ -43,3 +43,26 @@ class TiFLTrainer(BaseTrainer):
     def observe_round(self, plan: RoundPlan, idx: list[int], obs_times, totals) -> None:
         for j, i in enumerate(idx):
             self._speed_obs[plan.trained[i]] = float(totals[j])
+
+    # speed profile + tier rotation ride the resume envelope, otherwise a
+    # resumed run re-profiles from scratch and selects different tiers
+    def save_state(self) -> dict:
+        state = super().save_state()
+        cids = np.array(sorted(self._speed_obs), dtype=np.int64)
+        state["tifl"] = {
+            "obs_cids": cids,
+            "obs_times": np.array([self._speed_obs[int(c)] for c in cids]),
+            "round_robin": np.int64(self._round_robin),
+        }
+        return state
+
+    def load_state(self, state: dict) -> None:
+        super().load_state(state)
+        if "tifl" in state:
+            t = state["tifl"]
+            self._speed_obs = {
+                int(c): float(v)
+                for c, v in zip(np.asarray(t["obs_cids"]).reshape(-1),
+                                np.asarray(t["obs_times"]).reshape(-1))
+            }
+            self._round_robin = int(t["round_robin"])

@@ -1,14 +1,21 @@
-"""Production mesh construction.
+"""Production mesh construction + the simulated client-axis mesh.
 
 Single pod : (data=16, model=16)            — 256 chips (v5e pod)
 Multi-pod  : (pod=2, data=16, model=16)     — 512 chips
+Federation : (clients=N,)                   — 1-D mesh over the simulated
+             client axis (fed/execplan.py shards cohort programs over it)
 
 Functions, not module constants, so importing never touches jax device
 state (the dry-run must set XLA_FLAGS before first jax init).
 """
 from __future__ import annotations
 
+import os
+
 import jax
+import numpy as np
+
+CLIENT_AXIS = "clients"
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -25,3 +32,58 @@ def data_axes(mesh) -> tuple[str, ...]:
 def make_host_mesh():
     """1-device mesh for CPU smoke paths."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+# ---------------------------------------------------------------------------
+# simulated federation mesh (sharded client axis)
+# ---------------------------------------------------------------------------
+
+def ensure_sim_devices(n: int) -> None:
+    """Make ``n`` host-platform devices visible BEFORE jax's backend inits.
+
+    On CPU, jax exposes one device unless ``XLA_FLAGS`` carries
+    ``--xla_force_host_platform_device_count=N``; this appends the flag to the
+    environment so a 2-core container can exercise real N-way ``shard_map``
+    sharding. Must run before anything touches jax device state — raises if
+    the backend already initialized with fewer devices.
+    """
+    if n <= 1:
+        return
+    import re
+
+    flag = "--xla_force_host_platform_device_count"
+    cur = os.environ.get("XLA_FLAGS", "")
+    m = re.search(rf"{flag}=(\d+)", cur)
+    if m is None:
+        os.environ["XLA_FLAGS"] = f"{cur} {flag}={n}".strip()
+    elif int(m.group(1)) < n:
+        # replace in place, don't append: a second copy of the flag leaves
+        # XLA to pick a winner; pre-init the replacement applies cleanly
+        os.environ["XLA_FLAGS"] = cur.replace(m.group(0), f"{flag}={n}")
+    if len(jax.devices()) < n:
+        raise RuntimeError(
+            f"jax sees {len(jax.devices())} device(s) after "
+            f"ensure_sim_devices({n}) — its backend initialized before the "
+            f"flag could apply; launch with XLA_FLAGS={flag}={n} instead"
+        )
+
+
+def make_sim_mesh(n: int | None = None, *, axis: str = CLIENT_AXIS):
+    """1-D ``(clients=n)`` mesh over the first ``n`` visible devices.
+
+    ``n=None`` uses every visible device. The federation plane shards the
+    simulated-client axis of each cohort program over this mesh; a 1-device
+    sim mesh is the degenerate (but still shard_map-routed) case the
+    bit-equivalence tests pin down.
+    """
+    devs = jax.devices()
+    n = len(devs) if n is None else int(n)
+    if n < 1:
+        raise ValueError(f"mesh needs >=1 device, got {n}")
+    if len(devs) < n:
+        raise RuntimeError(
+            f"requested a {n}-device sim mesh but only {len(devs)} visible; "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n} (or call ensure_sim_devices) before jax initializes"
+        )
+    return jax.sharding.Mesh(np.array(devs[:n]), (axis,))

@@ -21,8 +21,8 @@ from repro.configs.resnet_cifar import get_resnet
 from repro.data.partition import dirichlet_partition, iid_partition
 from repro.data.pipeline import ClientDataset, make_eval_batch
 from repro.data.synthetic import DATASETS, ClassImageTask, SeqTask
-from repro.fed import (ChurnModel, DTFLTrainer, HeteroEnv, ResNetAdapter,
-                       SimClient, TransformerAdapter, TRAINERS)
+from repro.fed import (ChurnModel, DTFLTrainer, ExecPlan, HeteroEnv,
+                       ResNetAdapter, SimClient, TransformerAdapter, TRAINERS)
 
 
 def build_image_setup(cfg, args):
@@ -90,10 +90,17 @@ def main(argv=None):
                          "with staleness-weighted merges. Default: rounds "
                          "(async for --method fedat)")
     ap.add_argument("--exec", dest="exec_mode", default="cohort",
-                    choices=["cohort", "loop"],
+                    choices=["cohort", "loop", "sharded"],
                     help="cohort: vectorized tier-cohort programs (one "
                          "vmap+scan per tier); loop: per-client sequential "
-                         "debug path")
+                         "debug path; sharded: cohort programs with the "
+                         "client axis split over a device mesh (psum "
+                         "aggregation) — see --devices")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="mesh size for --exec sharded (default: all visible "
+                         "devices). On CPU, forces "
+                         "--xla_force_host_platform_device_count so N-way "
+                         "sharding works on any host")
     ap.add_argument("--n-groups", type=int, default=3,
                     help="speed groups for --engine async")
     ap.add_argument("--churn", action="store_true",
@@ -114,7 +121,22 @@ def main(argv=None):
     ap.add_argument("--switch-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None)
+    ap.add_argument("--save-every", type=int, default=10,
+                    help="checkpoint every N rounds (with --out-ckpt)")
+    ap.add_argument("--out-ckpt", default=None,
+                    help="write resumable train-state checkpoints here")
+    ap.add_argument("--resume", default=None,
+                    help="resume from a --out-ckpt envelope: restores "
+                         "params, per-tier aux heads, optimizer/scheduler "
+                         "state, env profiles, and the RNG streams, then "
+                         "continues deterministically (rounds/events only)")
     args = ap.parse_args(argv)
+
+    # mesh sizing must land before anything initializes jax's backend
+    if args.exec_mode == "sharded" and args.devices:
+        from repro.launch.mesh import ensure_sim_devices
+
+        ensure_sim_devices(args.devices)
 
     if args.arch.startswith("resnet"):
         full_cfg = get_resnet(args.arch)
@@ -131,7 +153,7 @@ def main(argv=None):
     env = HeteroEnv(args.clients, switch_every=args.switch_every, seed=args.seed)
     trainer_cls = TRAINERS[args.method]
     kw = {"scheduler": args.scheduler} if args.method == "dtfl" else {}
-    kw["cohort"] = args.exec_mode == "cohort"
+    kw["exec_plan"] = ExecPlan.from_flags(args.exec_mode, devices=args.devices)
     trainer = trainer_cls(adapter, clients, env, optim.adam(args.lr), seed=args.seed, **kw)
 
     # engine defaults per method (fedat is async by construction); an
@@ -149,6 +171,20 @@ def main(argv=None):
     run_kw = {"engine": engine}
     if engine == "async":
         run_kw["n_groups"] = args.n_groups
+    if args.out_ckpt:
+        run_kw["checkpoint_path"] = args.out_ckpt
+        run_kw["checkpoint_every"] = max(1, args.save_every)
+    if args.resume:
+        from repro import checkpoint as ckpt
+
+        if engine == "async":
+            ap.error("--resume supports --engine rounds|events only")
+        if args.churn:
+            ap.error("--resume with --churn is unsupported (churn state is "
+                     "not checkpointed)")
+        run_kw["resume"] = ckpt.load(args.resume)
+        print(f"[train] resuming from {args.resume} at round "
+              f"{int(run_kw['resume']['round'])}")
 
     t0 = time.time()
     logs = trainer.run(args.rounds, eval_batch, target_acc=args.target_acc,

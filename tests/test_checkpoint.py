@@ -1,0 +1,241 @@
+"""repro.checkpoint: pytree round-trips + the resumable-training envelope.
+
+Covers the NamedTuple flatten bug (NamedTuples used to collapse to plain
+tuples, silently changing pytree structure on load), the rng stream
+(de)serialization, and the end-to-end guarantee the envelope exists for:
+run N rounds straight == run k rounds, checkpoint, resume in a FRESH
+process-state trainer, run N-k more — bit-for-bit.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro import optim
+from repro.configs.resnet_cifar import RESNET56
+from repro.core.local_loss import DTFLState
+from repro.data.pipeline import ClientDataset, make_eval_batch
+from repro.data.synthetic import ClassImageTask
+from repro.fed import DTFLTrainer, FedAvgTrainer, HeteroEnv, ResNetAdapter, SimClient
+from repro.fed.adapter import DTFLStepState
+
+
+# ---------------------------------------------------------------------------
+# pytree structure round-trips
+# ---------------------------------------------------------------------------
+
+def roundtrip(tmp_path, tree):
+    p = os.path.join(str(tmp_path), "ck.npz")
+    ckpt.save(p, tree)
+    return ckpt.load(p)
+
+
+def test_namedtuple_structure_preserved(tmp_path):
+    opt = optim.adam(1e-3)
+    params = {"w": np.ones((3, 2), np.float32), "b": np.zeros(2, np.float32)}
+    tree = {
+        "step": DTFLStepState(params, params, params,
+                              opt.init(params), opt.init(params), opt.init(params)),
+        "state": DTFLState(params, params, params,
+                           opt.init(params), opt.init(params), opt.init(params)),
+        "mixed": [1, ("a-tuple", np.arange(3)), {"k": (np.float32(2.5),)}],
+    }
+    out = roundtrip(tmp_path, tree)
+    # the seed bug: NamedTuples came back as plain tuples, so the treedefs
+    # diverged and jax.tree.map(tree, restored) blew up
+    assert jax.tree.structure(out) == jax.tree.structure(tree)
+    assert isinstance(out["step"], DTFLStepState)
+    assert isinstance(out["state"], DTFLState)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_namedtuple_usable_with_tree_map(tmp_path):
+    s = DTFLStepState(*(np.full(2, float(i)) for i in range(6)))
+    out = roundtrip(tmp_path, s)
+    summed = jax.tree.map(lambda a, b: a + b, s, out)  # requires same treedef
+    assert isinstance(summed, DTFLStepState)
+    np.testing.assert_array_equal(np.asarray(summed.client), 0.0)
+
+
+def test_plain_containers_round_trip(tmp_path):
+    tree = {"l": [np.arange(2), [np.arange(3)]], "t": (np.float64(1.5),),
+            "scalar": np.int32(7)}
+    out = roundtrip(tmp_path, tree)
+    assert jax.tree.structure(out) == jax.tree.structure(tree)
+    assert isinstance(out["t"], tuple) and isinstance(out["l"], list)
+
+
+def test_empty_containers_round_trip(tmp_path):
+    """Empty dict/list/tuple nodes must survive — without the marker they
+    contribute no paths and vanish, shifting NamedTuple fields on load
+    (e.g. FedGKT's teacher cache checkpointed before the first server
+    phase)."""
+    tree = {"teacher": {}, "l": [], "t": (),
+            "nt": DTFLStepState({"w": np.ones(2)}, {}, [],
+                                (np.arange(2),), {"m": {}}, np.int32(1)),
+            "nested": {"a": {}, "b": [np.ones(1)]}}
+    out = roundtrip(tmp_path, tree)
+    assert jax.tree.structure(out) == jax.tree.structure(tree)
+    assert out["teacher"] == {} and out["l"] == [] and out["t"] == ()
+    assert out["nt"].aux == {} and out["nt"].server == []
+    assert int(out["nt"].s_opt) == 1  # fields did not shift
+
+
+def test_rng_pack_roundtrip_continues_stream():
+    g = np.random.default_rng(123)
+    g.random(7)
+    g.integers(0, 50, 11)
+    h = ckpt.unpack_rng(ckpt.pack_rng(g))
+    np.testing.assert_array_equal(g.random(16), h.random(16))
+    np.testing.assert_array_equal(g.choice(100, 8, replace=False),
+                                  h.choice(100, 8, replace=False))
+
+
+def test_rng_pack_rejects_non_pcg64():
+    legacy = np.random.Generator(np.random.MT19937(0))
+    with pytest.raises(ValueError):
+        ckpt.pack_rng(legacy)
+
+
+# ---------------------------------------------------------------------------
+# save -> resume -> continue determinism (the envelope's contract)
+# ---------------------------------------------------------------------------
+
+def _setup(n_clients=4, per=40):
+    cfg = RESNET56.reduced()
+    task = ClassImageTask(n_classes=10, image_size=cfg.image_size)
+    labels = np.random.default_rng(0).integers(0, 10, per * n_clients)
+    clients = [
+        SimClient(i, ClientDataset(task, labels, np.arange(i * per, (i + 1) * per), 16), None)
+        for i in range(n_clients)
+    ]
+    return (ResNetAdapter(cfg, cost_cfg=RESNET56), clients,
+            make_eval_batch(task, 64))
+
+
+def _trainer(adapter, clients, cls=DTFLTrainer):
+    # switch_every=2 so the env's profile-switch rng stream is exercised
+    # across the checkpoint boundary
+    return cls(adapter, clients, HeteroEnv(len(clients), switch_every=2, seed=0),
+               optim.adam(1e-3), seed=0)
+
+
+@pytest.mark.parametrize("engine", ["rounds", "events"])
+def test_resume_continues_bit_for_bit(tmp_path, engine):
+    p = os.path.join(str(tmp_path), "state.npz")
+    adapter, clients, ev = _setup()
+    straight = _trainer(adapter, clients)
+    logs_straight = straight.run(4, ev, participation=0.75, engine=engine)
+
+    first = _trainer(*_setup()[:2])
+    first.run(2, ev, participation=0.75, engine=engine,
+              checkpoint_path=p, checkpoint_every=2)
+    resumed = _trainer(*_setup()[:2])
+    logs_resumed = resumed.run(4, ev, participation=0.75, engine=engine,
+                               resume=ckpt.load(p))
+
+    assert [l.round for l in logs_resumed] == [2, 3]
+    assert logs_resumed[-1].clock == pytest.approx(logs_straight[-1].clock, rel=1e-12)
+    assert logs_resumed[-1].acc == logs_straight[-1].acc
+    for a, b in zip(jax.tree.leaves(straight.params), jax.tree.leaves(resumed.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for m in straight.aux:
+        for a, b in zip(jax.tree.leaves(straight.aux[m]),
+                        jax.tree.leaves(resumed.aux[m])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # scheduler EMA history resumed too
+    for c1, c2 in zip(straight.sched.clients, resumed.sched.clients):
+        assert c1.tier == c2.tier
+        for m in c1.ema:
+            assert c1.ema[m].value == pytest.approx(c2.ema[m].value, rel=1e-12)
+
+
+@pytest.mark.parametrize("cls_name", ["fedavg", "tifl", "fedgkt"])
+def test_resume_baseline_trainer(tmp_path, cls_name):
+    from repro.fed import TRAINERS
+
+    cls = TRAINERS[cls_name]
+    p = os.path.join(str(tmp_path), "state.npz")
+    adapter, clients, ev = _setup()
+    straight = _trainer(adapter, clients, cls=cls)
+    logs_straight = straight.run(3, ev, engine="rounds")
+
+    first = _trainer(*_setup()[:2], cls=cls)
+    first.run(2, ev, engine="rounds", checkpoint_path=p, checkpoint_every=1)
+    resumed = _trainer(*_setup()[:2], cls=cls)
+    logs_resumed = resumed.run(3, ev, engine="rounds", resume=ckpt.load(p))
+    # trainer-specific server state must ride the envelope: TiFL's tier
+    # rotation + speed profile, FedGKT's edge/server/aux/teacher state
+    assert logs_resumed[-1].clock == pytest.approx(logs_straight[-1].clock, rel=1e-12)
+    for a, b in zip(jax.tree.leaves(straight.params), jax.tree.leaves(resumed.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    if cls_name == "tifl":
+        assert straight._round_robin == resumed._round_robin
+        assert straight._speed_obs == resumed._speed_obs
+    if cls_name == "fedgkt":
+        assert set(straight._teacher) == set(resumed._teacher)
+        for a, b in zip(jax.tree.leaves(straight.server_params),
+                        jax.tree.leaves(resumed.server_params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resume_carries_last_eval_acc(tmp_path):
+    """With eval_every > 1, non-eval rounds after a resume must report the
+    last EVALUATED accuracy from the envelope, not 0.0 — otherwise logs and
+    target_acc early-stops diverge from an uninterrupted run."""
+    p = os.path.join(str(tmp_path), "state.npz")
+    adapter, clients, ev = _setup()
+    straight = _trainer(adapter, clients)
+    logs_straight = straight.run(3, ev, eval_every=2, engine="rounds")
+
+    first = _trainer(*_setup()[:2])
+    first.run(1, ev, eval_every=2, engine="rounds",
+              checkpoint_path=p, checkpoint_every=1)
+    resumed = _trainer(*_setup()[:2])
+    logs_resumed = resumed.run(3, ev, eval_every=2, engine="rounds",
+                               resume=ckpt.load(p))
+    # round 1 is a non-eval round: its acc is round 0's evaluated acc
+    assert logs_straight[0].acc > 0.0
+    assert logs_resumed[0].round == 1
+    assert logs_resumed[0].acc == logs_straight[1].acc == logs_straight[0].acc
+    assert logs_resumed[-1].acc == logs_straight[-1].acc
+
+
+def test_resume_rejected_for_async():
+    adapter, clients, ev = _setup()
+    tr = _trainer(adapter, clients)
+    with pytest.raises(ValueError, match="async"):
+        tr.run(2, ev, engine="async", resume={"round": 1, "clock": 0.0,
+                                              "trainer": tr.save_state()})
+
+
+def test_async_envelope_rejected_by_sync_engines(tmp_path):
+    """An async-written envelope counts merges, not rounds, and packs no
+    participant rng — resuming it under rounds/events must raise instead of
+    silently replaying round-0 draws at a bogus round cursor."""
+    from repro.fed.engine import save_train_state
+
+    p = os.path.join(str(tmp_path), "async.npz")
+    adapter, clients, ev = _setup()
+    tr = _trainer(adapter, clients)
+    save_train_state(p, tr, round_=5, clock=10.0, engine="async")
+    for engine in ("rounds", "events"):
+        fresh = _trainer(*_setup()[:2])
+        with pytest.raises(ValueError, match="engine"):
+            fresh.run(6, ev, engine=engine, resume=ckpt.load(p))
+
+
+def test_trainer_key_round_trips(tmp_path):
+    adapter, clients, _ = _setup()
+    tr = _trainer(adapter, clients)
+    tr._next_key()
+    state = tr.save_state()
+    other = _trainer(*_setup()[:2])
+    other.load_state(jax.tree.map(np.asarray, state))
+    np.testing.assert_array_equal(np.asarray(tr.key), np.asarray(other.key))
+    k1, k2 = jax.random.split(jnp.asarray(tr.key)), jax.random.split(other.key)
+    np.testing.assert_array_equal(np.asarray(k1), np.asarray(k2))

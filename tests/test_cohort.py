@@ -40,10 +40,10 @@ def assert_trees_close(a, b, atol=2e-4, rtol=1e-3):
 
 def run_both(adapter, clients, *, scheduler="dynamic", rounds=2):
     trainers = []
-    for cohort in (False, True):
+    for exec_plan in ("loop", "cohort"):
         tr = DTFLTrainer(
             adapter, clients, HeteroEnv(len(clients), seed=0), optim.adam(1e-3),
-            seed=0, scheduler=scheduler, cohort=cohort,
+            seed=0, scheduler=scheduler, exec_plan=exec_plan,
         )
         trainers.append(tr)
     seq, coh = trainers
@@ -114,10 +114,10 @@ def test_cohort_mask_semantics():
 def test_baseline_cohort_equals_sequential():
     adapter, clients = build_clients([64, 48, 96])
     trainers = []
-    for cohort in (False, True):
+    for exec_plan in ("loop", "cohort"):
         tr = FedAvgTrainer(
             adapter, clients, HeteroEnv(len(clients), seed=0), optim.adam(1e-3),
-            seed=0, cohort=cohort,
+            seed=0, exec_plan=exec_plan,
         )
         trainers.append(tr)
     seq, coh = trainers

@@ -1,0 +1,173 @@
+"""Sharded federation plane: mesh-sharded cohort programs vs the cohort path.
+
+Equivalence ladder (mirrors PR 1/2's engine equivalence tests):
+
+* a 1-device sim mesh must reproduce the cohort path BIT-FOR-BIT — the
+  shard_map routing, on-device psum weighted sums, and the host-side
+  ``combine_weighted_sums`` finalize are the same math in the same order;
+* an N-device mesh must match within numerical tolerance (the only change
+  is the cross-shard reduction order of the psum collective);
+* ragged cohorts must pad their client axis to a multiple of the mesh axis
+  with exact no-op pad clients (zero batches, all-False mask, weight 0).
+
+The N-device tests skip unless jax sees >=4 devices; CI runs them with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.configs.resnet_cifar import RESNET56
+from repro.data.pipeline import ClientDataset
+from repro.data.synthetic import ClassImageTask
+from repro.fed import (DTFLTrainer, ExecPlan, FedAvgTrainer, HeteroEnv,
+                       ResNetAdapter, SimClient)
+from repro.fed import cohort as cohort_engine
+from repro.launch.mesh import make_sim_mesh
+
+N_DEV = len(jax.devices())
+multi_device = pytest.mark.skipif(
+    N_DEV < 4, reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=4"
+)
+
+
+def build_clients(sizes, batch=16):
+    cfg = RESNET56.reduced()
+    task = ClassImageTask(n_classes=10, image_size=cfg.image_size)
+    labels = np.random.default_rng(0).integers(0, 10, sum(sizes))
+    clients, off = [], 0
+    for i, s in enumerate(sizes):
+        idx = np.arange(off, off + s)
+        off += s
+        clients.append(SimClient(i, ClientDataset(task, labels, idx, batch), None))
+    adapter = ResNetAdapter(cfg, cost_cfg=RESNET56)
+    return adapter, clients
+
+
+def make_trainer(adapter, clients, exec_plan, cls=DTFLTrainer, **kw):
+    if cls is DTFLTrainer:
+        kw.setdefault("scheduler", "dynamic")
+    return cls(adapter, clients, HeteroEnv(len(clients), seed=0),
+               optim.adam(1e-3), seed=0, exec_plan=exec_plan, **kw)
+
+
+def run_pair(adapter, clients, plan_a, plan_b, *, rounds=2, cls=DTFLTrainer, **kw):
+    a = make_trainer(adapter, clients, plan_a, cls=cls, **kw)
+    b = make_trainer(adapter, clients, plan_b, cls=cls, **kw)
+    parts = list(range(len(clients)))
+    for r in range(rounds):
+        ra = a.train_round(r, parts)
+        rb = b.train_round(r, parts)
+        if cls is DTFLTrainer:
+            assert ra[1] == rb[1], f"round {r}: tier assignments diverged"
+    return a, b
+
+
+def leaves_equal(x, y):
+    lx, ly = jax.tree.leaves(x), jax.tree.leaves(y)
+    assert len(lx) == len(ly)
+    for a, b in zip(lx, ly):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def leaves_close(x, y, atol=2e-4, rtol=1e-3):
+    for a, b in zip(jax.tree.leaves(x), jax.tree.leaves(y)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=atol, rtol=rtol)
+
+
+# ---------------------------------------------------------------------------
+# 1-device mesh: bit-for-bit vs cohort path
+# ---------------------------------------------------------------------------
+
+def test_sharded_1dev_bit_equals_cohort():
+    adapter, clients = build_clients([64, 64, 48, 32])
+    coh, sh = run_pair(adapter, clients, ExecPlan.cohort(),
+                       ExecPlan.sharded(make_sim_mesh(1)))
+    leaves_equal(coh.params, sh.params)
+    for m in coh.aux:
+        leaves_equal(coh.aux[m], sh.aux[m])
+
+
+def test_sharded_1dev_scheduler_observations_identical():
+    adapter, clients = build_clients([64, 48, 32, 16])
+    coh, sh = run_pair(adapter, clients, ExecPlan.cohort(),
+                       ExecPlan.sharded(make_sim_mesh(1)))
+    for c1, c2 in zip(coh.sched.clients, sh.sched.clients):
+        assert c1.tier == c2.tier and c1.last_obs_tier == c2.last_obs_tier
+        for m in c1.ema:
+            assert c1.ema[m].value == pytest.approx(c2.ema[m].value, rel=1e-12)
+
+
+def test_baseline_sharded_1dev_bit_equals_cohort():
+    adapter, clients = build_clients([64, 48, 96])
+    coh, sh = run_pair(adapter, clients, ExecPlan.cohort(),
+                       ExecPlan.sharded(make_sim_mesh(1)), cls=FedAvgTrainer)
+    leaves_equal(coh.params, sh.params)
+
+
+# ---------------------------------------------------------------------------
+# N-device mesh: numerical equivalence + real padding
+# ---------------------------------------------------------------------------
+
+@multi_device
+def test_sharded_4dev_matches_cohort():
+    # 5 clients with ragged batch counts -> pads to 8 columns on a 4-mesh
+    adapter, clients = build_clients([64, 64, 48, 32, 16])
+    coh, sh = run_pair(adapter, clients, ExecPlan.cohort(),
+                       ExecPlan.sharded(make_sim_mesh(4)))
+    leaves_close(coh.params, sh.params)
+    for m in coh.aux:
+        leaves_close(coh.aux[m], sh.aux[m])
+
+
+@multi_device
+def test_baseline_sharded_4dev_matches_cohort():
+    adapter, clients = build_clients([64, 48, 96])
+    coh, sh = run_pair(adapter, clients, ExecPlan.cohort(),
+                       ExecPlan.sharded(make_sim_mesh(4)), cls=FedAvgTrainer)
+    leaves_close(coh.params, sh.params)
+
+
+# ---------------------------------------------------------------------------
+# padding policy (no mesh needed: build_cohorts is host-side)
+# ---------------------------------------------------------------------------
+
+def test_ragged_cohort_pads_to_mesh_multiple():
+    adapter, clients = build_clients([64, 48, 16, 96, 32])  # one tier, 5 clients
+    cohorts = cohort_engine.build_cohorts(
+        clients, list(range(5)), {k: 0 for k in range(5)}, r=0, local_epochs=1,
+        pad_multiple=4,
+    )
+    (co,) = cohorts
+    assert co.size == 5 and co.n_pad == 3
+    for name, arr in co.batches.items():
+        assert arr.shape[1] == 8 and arr.shape[1] % 4 == 0
+        np.testing.assert_array_equal(arr[:, co.size:], 0)  # pad columns zeroed
+    assert not co.mask[:, co.size:].any()                   # pads never step
+    w = co.client_weights(clients)
+    assert w.shape == (8,) and (w[co.size:] == 0).all() and (w[:co.size] > 0).all()
+
+
+def test_pad_multiple_one_is_identity():
+    adapter, clients = build_clients([64, 48])
+    a = cohort_engine.build_cohorts(clients, [0, 1], {0: 0, 1: 0}, 0, 1)
+    b = cohort_engine.build_cohorts(clients, [0, 1], {0: 0, 1: 0}, 0, 1,
+                                    pad_multiple=1)
+    (ca,), (cb,) = a, b
+    assert cb.n_pad == 0 and ca.mask.shape == cb.mask.shape
+    for name in ca.batches:
+        np.testing.assert_array_equal(ca.batches[name], cb.batches[name])
+
+
+def test_execplan_validation():
+    with pytest.raises(ValueError):
+        ExecPlan(mode="warp")
+    with pytest.raises(ValueError):
+        ExecPlan(mode="sharded")          # mesh required
+    assert ExecPlan.resolve(None).mode == "cohort"
+    assert ExecPlan.resolve("loop").mode == "loop"
+    plan = ExecPlan.sharded(make_sim_mesh(1))
+    assert plan.n_shards == 1 and plan.pad_multiple == 1
+    assert ExecPlan.cohort().pad_multiple == 1
+    assert "sharded" in plan.describe()
