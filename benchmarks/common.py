@@ -41,16 +41,21 @@ def image_setup(n_clients=10, samples=2000, batch=32, iid=True, n_classes=10, se
 def run_method(method, cfg, clients, ev, *, cost_model="resnet-110", rounds=8,
                target=None, scheduler="dynamic", participation=1.0, seed=0,
                switch_every=50, dcor_alpha=0.0, lr=1e-3, exec_plan=None,
-               engine="rounds", churn=None, n_groups=3):
+               engine="rounds", churn=None, n_groups=3, codec=None,
+               profiles=None):
     """``engine``: "rounds" (legacy scalar clock), "events" (discrete-event
     sync; supports ``churn``), or "async" (FedAT-style per-tier pacing).
     ``fedat`` always runs async regardless of ``engine``. ``exec_plan``:
-    None/"cohort" | "loop" | ExecPlan.sharded(mesh) — the execution plane."""
+    None/"cohort" | "loop" | ExecPlan.sharded(mesh) — the execution plane.
+    ``codec``: communication codec spec (identity | bf16 | int8 | topk<f>).
+    ``profiles``: resource-profile pool override for the HeteroEnv."""
     cost_cfg = get_resnet(cost_model)
     adapter = ResNetAdapter(cfg, cost_cfg=cost_cfg, dcor_alpha=dcor_alpha)
-    env = HeteroEnv(len(clients), switch_every=switch_every, seed=seed)
+    env = HeteroEnv(len(clients), profiles=profiles,
+                    switch_every=switch_every, seed=seed)
     kw = {"scheduler": scheduler} if method == "dtfl" else {}
     kw["exec_plan"] = exec_plan
+    kw["codec"] = codec
     if method == "fedat":
         kw["n_groups"] = n_groups
     tr = TRAINERS[method](adapter, clients, env, optim.adam(lr), seed=seed, **kw)

@@ -25,8 +25,7 @@ def simulated_total_time(n_tiers: int, profiles, n_clients=10, seed=0) -> float:
     7-tier ResNet-110 design (M=1 -> everyone keeps md1..md7; larger M adds
     offloading options for slow clients)."""
     costs = timemodel.resnet_tier_costs(RESNET110, batch_size=100)
-    prof = TierProfile.from_cost_table(costs, N_BATCHES,
-                                       ref_flops=timemodel.UNIT_FLOPS,
+    prof = TierProfile.from_cost_table(costs, ref_flops=timemodel.UNIT_FLOPS,
                                        server_flops=timemodel.SERVER_FLOPS)
     allowed = list(range(costs.n_tiers))[-n_tiers:]
     sched = DynamicTierScheduler(prof, n_clients, allowed=allowed)

@@ -17,6 +17,7 @@ SUITES = [
     "fig3_tier_count",
     "fig_async_timeline",
     "table5_privacy",
+    "table6_comm",
     "roofline",
 ]
 

@@ -24,7 +24,7 @@ opt = optim.adam(1e-3)
 params = R.init(key, cfg)
 costs = timemodel.resnet_tier_costs(RESNET56, batch_size=32)  # priced full-size
 profile = TierProfile.from_cost_table(
-    costs, n_batches=4, ref_flops=timemodel.UNIT_FLOPS,
+    costs, ref_flops=timemodel.UNIT_FLOPS,
     server_flops=timemodel.SERVER_FLOPS)
 sched = DynamicTierScheduler(profile, n_clients=3)
 

@@ -1,0 +1,339 @@
+"""Communication codecs: what actually travels on DTFL's three wires.
+
+The paper's whole premise is bandwidth-heterogeneous clients (10–100 Mbps
+profiles; Algorithm 1 schedules on ``D_size(m)/nu``), and FedAT
+(arXiv:2010.05958) shows update compression cuts communicated bytes ~8x with
+no accuracy loss. This module makes compression first-class: a :class:`Codec`
+is applied to the three real wires a DTFL round has —
+
+  * the per-batch **activation(+label) uplink** ``z``,
+  * the per-round **client-model download** (client half + tier aux head),
+  * the per-round **client-update upload** (trained client half + aux delta,
+    sent as a delta against the downloaded reference),
+
+— inside the jitted cohort programs (``fed/dtfl.py`` / ``fed/base.py``), and
+its *true* wire sizes (:class:`WireSizes`) are threaded through the analytic
+time model (``core/timemodel.py``) and the dynamic tier scheduler's profile
+(``core/scheduler.py``), so re-tiering reacts when compression changes the
+compute/communication balance.
+
+Codecs are pure jnp and vmap/shard_map-compatible: ``rt`` (round-trip =
+encode + decode on-device; the bytes named by ``nbytes`` are what the encoded
+form would occupy on a real wire) maps one tensor, ``tree_rt`` a pytree.
+``TopKCodec`` is *stateful*: the client keeps the un-sent residual
+(error feedback) and adds it back before the next upload — trainers hold that
+state per client and checkpoint it. The int8 path has a fused Pallas
+quantize/dequant kernel (``kernels/quantize.py``); the jnp body here is the
+bit-equivalent reference used by default on CPU.
+
+Identity is special-cased everywhere: ``tree_rt`` returns its argument
+unchanged (so jitted programs trace identically to the pre-codec path) and
+:func:`wire_sizes` reproduces the legacy analytic byte model exactly
+(the paper's Eq.-5 accounting: z per batch + model download per round for
+split training, download + upload for full-model baselines).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FP32_BYTES = 4.0
+
+
+def _is_float(x) -> bool:
+    return jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating)
+
+
+class Codec:
+    """Base codec: identity semantics, fp32 wire pricing."""
+
+    name = "identity"
+    is_identity = True
+    stateful = False          # True => rt_ef carries client-held error feedback
+
+    # ---- tensor path (jnp, trace-safe, vmap-compatible) ----
+    def rt(self, x):
+        """Round-trip one tensor through the wire (decode(encode(x)))."""
+        return x
+
+    def tree_rt(self, tree):
+        if self.is_identity:
+            return tree       # structurally unchanged => identical jit trace
+        return jax.tree.map(self.rt, tree)
+
+    def down_rt(self, x):
+        """Round-trip for the server->client DOWNLOAD wire. Defaults to
+        :meth:`rt`; sparsifying codecs override it to identity — top-k is an
+        uplink technique (the error feedback compensates only what the
+        CLIENT fails to send; truncating the broadcast would zero the
+        aggregated global a little more every round, uncompensated), so the
+        server ships the dense model and pays dense download bytes."""
+        return self.rt(x)
+
+    def tree_down_rt(self, tree):
+        if self.is_identity:
+            return tree
+        return jax.tree.map(self.down_rt, tree)
+
+    def rt_ef(self, x, e):
+        """Error-feedback round-trip: compress ``x + e``; the un-sent part
+        becomes the next residual. Identity/stateless codecs keep e = 0."""
+        c = x + e
+        y = self.rt(c)
+        return y, c - y
+
+    def tree_rt_ef(self, tree, ef):
+        y = jax.tree.map(lambda x, e: self.rt(x + e), tree, ef)
+        new_ef = jax.tree.map(lambda x, e, d: (x + e) - d, tree, ef, y)
+        return y, new_ef
+
+    # ---- wire pricing (numpy, analytic — never runs the codec) ----
+    def nbytes(self, n_elems):
+        """Wire bytes for a float tensor (or per-wire aggregate) of
+        ``n_elems`` elements. Vectorized over numpy arrays of counts."""
+        return FP32_BYTES * np.asarray(n_elems, float)
+
+    def down_nbytes(self, n_elems):
+        """Download-wire bytes (matches :meth:`down_rt`'s transform)."""
+        return self.nbytes(n_elems)
+
+
+class IdentityCodec(Codec):
+    pass
+
+
+class Bf16Codec(Codec):
+    """Truncate float tensors to bfloat16 on the wire (2 bytes/element)."""
+
+    name = "bf16"
+    is_identity = False
+
+    def rt(self, x):
+        if not _is_float(x):
+            return x
+        return x.astype(jnp.bfloat16).astype(x.dtype)
+
+    def nbytes(self, n_elems):
+        return 2.0 * np.asarray(n_elems, float)
+
+
+class Int8Codec(Codec):
+    """Per-tensor-scale int8 quantization: s = max|x|/127, q = round(x/s).
+
+    ``use_kernel=True`` dispatches to the fused Pallas quantize/dequant
+    kernel (``kernels/ops.int8_roundtrip_op``); the default jnp body is its
+    bit-equivalent reference (``kernels/ref.int8_roundtrip_ref``).
+    """
+
+    name = "int8"
+    is_identity = False
+
+    def __init__(self, use_kernel: bool = False):
+        self.use_kernel = use_kernel
+
+    def rt(self, x):
+        if not _is_float(x):
+            return x
+        if self.use_kernel:
+            from repro.kernels.ops import int8_roundtrip_op
+
+            return int8_roundtrip_op(x)
+        from repro.kernels.ref import int8_roundtrip_ref
+
+        return int8_roundtrip_ref(x)
+
+    def nbytes(self, n_elems):
+        # 1 byte/element + one fp32 scale per wire
+        return np.asarray(n_elems, float) + FP32_BYTES
+
+
+class TopKCodec(Codec):
+    """Magnitude top-k sparsification with client-held error feedback.
+
+    Keeps the ``ceil(frac * n)`` largest-|x| entries (value + index on the
+    wire: 8 bytes each), zeroes the rest. Trainers route uploads through
+    ``rt_ef`` so the un-sent mass re-enters the next round's upload — the
+    standard convergence fix for sparsified updates. The DOWNLOAD wire is
+    NOT sparsified (``down_rt`` = identity, priced dense): error feedback
+    lives on the client and cannot compensate a truncated broadcast, which
+    would otherwise zero ~(1-frac) of the aggregated global every round.
+    """
+
+    is_identity = False
+    stateful = True
+
+    def __init__(self, frac: float):
+        if not (0.0 < frac <= 1.0):
+            raise ValueError(f"topk fraction must be in (0, 1], got {frac}")
+        self.frac = float(frac)
+        self.name = f"topk{self.frac:g}"
+
+    def _k(self, n: int) -> int:
+        return max(1, int(math.ceil(self.frac * n)))
+
+    def rt(self, x):
+        if not _is_float(x):
+            return x
+        flat = x.reshape(-1)
+        k = self._k(flat.size)
+        if k >= flat.size:
+            return x
+        _, idx = jax.lax.top_k(jnp.abs(flat.astype(jnp.float32)), k)
+        out = jnp.zeros_like(flat).at[idx].set(flat[idx])
+        return out.reshape(x.shape)
+
+    def down_rt(self, x):
+        return x          # dense broadcast (see class docstring)
+
+    def nbytes(self, n_elems):
+        n = np.asarray(n_elems, float)
+        k = np.maximum(1.0, np.ceil(self.frac * n))
+        return 8.0 * k   # fp32 value + int32 index per kept entry
+
+    def down_nbytes(self, n_elems):
+        return FP32_BYTES * np.asarray(n_elems, float)   # dense download
+
+
+def make_codec(spec: "Codec | str | None") -> Codec:
+    """Resolve a CLI/ctor codec spec: None | 'identity' | 'bf16' | 'int8' |
+    'topk<frac>' (e.g. ``topk0.05``) | a Codec instance."""
+    if spec is None:
+        return IdentityCodec()
+    if isinstance(spec, Codec):
+        return spec
+    s = str(spec).strip().lower()
+    if s in ("identity", "none", ""):
+        return IdentityCodec()
+    if s == "bf16":
+        return Bf16Codec()
+    if s == "int8":
+        return Int8Codec()
+    if s.startswith("topk"):
+        frac = s[4:].lstrip(":")
+        try:
+            return TopKCodec(float(frac))
+        except ValueError as e:
+            raise ValueError(f"bad topk codec spec {spec!r}: {e}") from None
+    raise ValueError(
+        f"unknown codec {spec!r}; pick identity | bf16 | int8 | topk<frac>")
+
+
+# ---------------------------------------------------------------------------
+# upload-wire helpers (shared by the cohort/sharded/loop trainer programs)
+# ---------------------------------------------------------------------------
+
+def uplink_rt(codec: Codec, trained, ref):
+    """Client-update upload wire over a cohort: ``trained`` has a leading
+    client axis, ``ref`` is the single downloaded reference every member
+    started from. The update is sent as a delta (far more compressible than
+    raw weights), codec'd per client, and reconstructed server-side as
+    ``ref + decode(encode(trained - ref))``."""
+    if codec.is_identity:
+        return trained
+    delta = jax.tree.map(lambda t, r: t - r[None], trained, ref)
+    dec = jax.vmap(codec.tree_rt)(delta)
+    return jax.tree.map(lambda r, d: r[None] + d, ref, dec)
+
+
+def uplink_rt_ef(codec: Codec, trained, ref, ef):
+    """:func:`uplink_rt` with client-held error feedback: ``ef`` (leading
+    client axis) is the residual each client failed to send last round;
+    returns the reconstructed uploads and the new residuals."""
+    delta = jax.tree.map(lambda t, r: t - r[None], trained, ref)
+    dec, ef2 = jax.vmap(codec.tree_rt_ef)(delta, ef)
+    return jax.tree.map(lambda r, d: r[None] + d, ref, dec), ef2
+
+
+def uplink_rt_one(codec: Codec, trained, ref, ef=None):
+    """Single-client :func:`uplink_rt` / :func:`uplink_rt_ef` (the loop
+    execution path); returns ``(upload, new_ef_or_None)``."""
+    if codec.is_identity:
+        return trained, None
+    delta = jax.tree.map(lambda t, r: t - r, trained, ref)
+    if ef is None:
+        dec = codec.tree_rt(delta)
+        new_ef = None
+    else:
+        dec, new_ef = codec.tree_rt_ef(delta, ef)
+    return jax.tree.map(lambda r, d: r + d, ref, dec), new_ef
+
+
+# ---------------------------------------------------------------------------
+# analytic wire sizes (threaded through timemodel + scheduler profiling)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class WireSizes:
+    """Codec-true bytes for every wire of a round, per tier.
+
+    ``z_bytes[m]``    — per-batch activation(+label) uplink; labels ride raw.
+    ``down_bytes[m]`` — per-round client-model (+aux head) download.
+    ``up_bytes[m]``   — per-round client-update upload (delta coding).
+    ``full_down`` / ``full_up`` — the full-model baselines' two wires.
+
+    Identity reproduces the legacy analytic accounting bit-for-bit: split
+    training prices z + amortized download (the paper's ``D_size``; upload
+    unpriced, as in Eq. 5), full-model baselines price download + upload
+    (the existing ``2 * full_param_bytes``).
+    """
+
+    z_bytes: np.ndarray
+    down_bytes: np.ndarray
+    up_bytes: np.ndarray
+    full_down: float
+    full_up: float
+
+    @property
+    def param_bytes(self) -> np.ndarray:
+        """Per-round parameter-wire total (download + upload) per tier."""
+        return self.down_bytes + self.up_bytes
+
+    def comm_bytes(self, tiers, n_batches) -> np.ndarray:
+        """Total per-round bytes on all wires for clients at ``tiers``."""
+        return (self.z_bytes[np.asarray(tiers, int)] * np.asarray(n_batches, float)
+                + self.param_bytes[np.asarray(tiers, int)])
+
+    def uplink_bytes(self, tiers, n_batches) -> np.ndarray:
+        """Client->server bytes only (z uplink + update upload)."""
+        return (self.z_bytes[np.asarray(tiers, int)] * np.asarray(n_batches, float)
+                + self.up_bytes[np.asarray(tiers, int)])
+
+
+def wire_sizes(costs, codec: "Codec | str | None" = None) -> WireSizes:
+    """Build :class:`WireSizes` from a ``TierCostTable``.
+
+    Non-identity codecs price from the table's element counts (``z_elems``,
+    ``param_elems``; falls back to bytes/4 for hand-built tables); the wire
+    is approximated as one tensor per wire (per-tensor overheads like int8
+    scales are O(bytes_per_tensor) and negligible against the payload).
+    """
+    codec = make_codec(codec)
+    z_id = np.asarray(costs.z_bytes, float)
+    p_id = np.asarray(costs.client_param_bytes, float)
+    if codec.is_identity:
+        return WireSizes(
+            z_bytes=z_id.copy(), down_bytes=p_id.copy(),
+            up_bytes=np.zeros_like(p_id),
+            full_down=float(costs.full_param_bytes),
+            full_up=float(costs.full_param_bytes),
+        )
+    have_elems = getattr(costs, "z_elems", None) is not None
+    z_elems = (np.asarray(costs.z_elems, float) if have_elems
+               else z_id / FP32_BYTES)
+    label_b = float(costs.label_bytes) if have_elems else 0.0
+    p_elems = (np.asarray(costs.param_elems, float)
+               if getattr(costs, "param_elems", None) is not None
+               else p_id / FP32_BYTES)
+    f_elems = (float(costs.full_param_elems) if getattr(costs, "full_param_elems", 0)
+               else float(costs.full_param_bytes) / FP32_BYTES)
+    return WireSizes(
+        z_bytes=codec.nbytes(z_elems) + label_b,
+        down_bytes=codec.down_nbytes(p_elems),
+        up_bytes=codec.nbytes(p_elems),
+        full_down=float(codec.down_nbytes(f_elems)),
+        full_up=float(codec.nbytes(f_elems)),
+    )

@@ -24,13 +24,23 @@ Params = dict
 MOE_AUX_WEIGHT = 0.01
 
 
-def token_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
-    """Mean token cross-entropy; logits any float dtype, stats in fp32."""
+def token_xent(logits: jax.Array, labels: jax.Array,
+               weight: jax.Array | None = None) -> jax.Array:
+    """Mean token cross-entropy; logits any float dtype, stats in fp32.
+
+    ``weight`` (leading-axes-broadcastable, e.g. a per-sample (B,) pad mask
+    from ``data/pipeline.py``) turns the mean into a weighted mean so padded
+    samples contribute nothing."""
     lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
     picked = jnp.take_along_axis(
         logits.astype(jnp.float32), labels[..., None], axis=-1
     )[..., 0]
-    return jnp.mean(lse - picked)
+    per = lse - picked
+    if weight is None:
+        return jnp.mean(per)
+    w = weight.astype(jnp.float32)
+    w = jnp.broadcast_to(w.reshape(w.shape + (1,) * (per.ndim - w.ndim)), per.shape)
+    return jnp.sum(per * w) / jnp.maximum(jnp.sum(w), 1.0)
 
 
 class DTFLState(NamedTuple):

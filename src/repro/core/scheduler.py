@@ -8,7 +8,12 @@ sees per round:
 
 Tier profiling (done once, lines "Tier Profiling"): reference per-tier
 client/server times ``t_client_ref[m]``, ``t_server_ref[m]`` on a standard
-batch, and transfer sizes ``d_size(m)``. The Table-2 invariance — normalized
+batch, and transfer sizes — per-batch uplink ``z_bytes[m]`` plus the
+per-round parameter wire ``param_bytes[m]``, kept separate so per-client
+communication composes as ``z_bytes*N_k + param_bytes`` for any task size
+``N_k`` (folding them into one per-batch ``d_size`` baked a reference batch
+count into the profile and overcounted the download by ``N_k/N_ref`` for
+clients whose task size differs). The Table-2 invariance — normalized
 time ratios between tiers are client-independent — lets the scheduler
 extrapolate a client's time in *unobserved* tiers from the one observed tier
 (Algorithm 1 lines 24-29).
@@ -26,25 +31,63 @@ import numpy as np
 
 @dataclass
 class TierProfile:
-    """Server-side profiling table (per standard batch)."""
+    """Server-side profiling table (per standard batch).
+
+    Communication is profiled per wire: ``z_bytes`` scales with a client's
+    batch count, ``param_bytes`` is paid once per round. Legacy callers may
+    still pass a combined per-batch ``d_size``; it is treated as all-z
+    (every byte scales with n_batches), which reproduces the old
+    ``d_size * N / nu`` composition exactly.
+    """
 
     t_client_ref: np.ndarray   # (M,) reference client compute time per batch
     t_server_ref: np.ndarray   # (M,) server compute time per batch
-    d_size: np.ndarray         # (M,) transferred bytes per batch
+    d_size: np.ndarray | None = None       # legacy: combined bytes per batch
+    z_bytes: np.ndarray | None = None      # (M,) per-batch uplink bytes
+    param_bytes: np.ndarray | None = None  # (M,) per-round parameter bytes
+
+    def __post_init__(self):
+        if self.z_bytes is None:
+            if self.d_size is None:
+                raise ValueError("TierProfile needs z_bytes (+param_bytes) "
+                                 "or a legacy d_size")
+            self.z_bytes = np.asarray(self.d_size, float)
+        else:
+            self.z_bytes = np.asarray(self.z_bytes, float)
+        if self.param_bytes is None:
+            self.param_bytes = np.zeros_like(self.z_bytes)
+        else:
+            self.param_bytes = np.asarray(self.param_bytes, float)
 
     @property
     def n_tiers(self) -> int:
         return len(self.t_client_ref)
 
+    def comm_bytes(self, tiers, n_batches):
+        """Per-round wire bytes for clients at ``tiers`` with ``n_batches``
+        local batches (the D^m*N term of Algorithm 1 line 22, per-wire)."""
+        return (self.z_bytes[tiers] * np.asarray(n_batches, float)
+                + self.param_bytes[tiers])
+
     @classmethod
-    def from_cost_table(cls, costs, n_batches: int, *, ref_flops: float, server_flops: float):
-        """Build the profile from an analytic TierCostTable (timemodel.py)."""
+    def from_cost_table(cls, costs, *, ref_flops: float, server_flops: float,
+                        wires=None):
+        """Build the profile from an analytic TierCostTable (timemodel.py).
+
+        ``wires`` (a ``codec.WireSizes``) prices the wires under the active
+        compression codec; None uses the identity accounting. The profile
+        keeps z and parameter bytes separate — the old version baked a
+        reference ``n_batches`` into one d_size, which overcounted the
+        parameter wire for clients with a different task size.
+        """
+        from repro.core.codec import wire_sizes
+
+        w = wires if wires is not None else wire_sizes(costs)
         return cls(
             t_client_ref=costs.client_flops / ref_flops,
             t_server_ref=costs.server_flops / server_flops,
-            d_size=np.array(
-                [costs.d_size(m, n_batches) for m in range(costs.n_tiers)]
-            ),
+            z_bytes=np.asarray(w.z_bytes, float).copy(),
+            param_bytes=np.asarray(w.param_bytes, float).copy(),
         )
 
 
@@ -93,7 +136,7 @@ class DynamicTierScheduler:
         st = self.clients[k]
         st.nu = nu
         st.n_batches = n_batches
-        comm = self.profile.d_size[tier] * n_batches / nu
+        comm = self.profile.comm_bytes(tier, n_batches) / nu
         compute = max(total_client_time - comm, 1e-9)
         st.ema.setdefault(tier, EMA()).update(compute)
         st.last_obs_tier = tier
@@ -107,7 +150,7 @@ class DynamicTierScheduler:
         ``observe`` per client."""
         tiers = np.asarray(tiers, int)
         nb = np.asarray(n_batches)
-        comm = self.profile.d_size[tiers] * nb / np.asarray(nus, float)
+        comm = self.profile.comm_bytes(tiers, nb) / np.asarray(nus, float)
         compute = np.maximum(np.asarray(total_client_times, float) - comm, 1e-9)
         for k, tier, c, nu, n in zip(ks, tiers, compute, nus, nb):
             st = self.clients[k]
@@ -126,7 +169,8 @@ class DynamicTierScheduler:
         prof = self.profile
         nb = np.array([self.clients[k].n_batches for k in ks], float)
         nu = np.array([self.clients[k].nu for k in ks], float)
-        t_com = prof.d_size[None, :] * nb[:, None] / nu[:, None]              # (K, M)
+        t_com = (prof.z_bytes[None, :] * nb[:, None]
+                 + prof.param_bytes[None, :]) / nu[:, None]                   # (K, M)
         t_srv = prof.t_server_ref[None, :] * nb[:, None]                      # (K, M)
         t_cli = prof.t_client_ref[None, :] * nb[:, None]                      # no-obs fallback
         for i, k in enumerate(ks):

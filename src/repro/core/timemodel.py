@@ -69,6 +69,11 @@ class TierCostTable:
     server_flops[m]  : server-side fwd+bwd FLOPs per batch
     z_bytes[m]       : activation (+label) upload per batch
     client_param_bytes[m] : client-side model download per round
+
+    The ``*_elems`` fields carry raw element counts alongside the identity
+    (fp32/bf16) byte pricing, so the communication plane (``core/codec.py:
+    wire_sizes``) can price the same wires under any codec; ``label_bytes``
+    is the per-batch label payload, which always rides uncompressed.
     """
 
     client_flops: np.ndarray
@@ -77,6 +82,10 @@ class TierCostTable:
     client_param_bytes: np.ndarray
     full_flops: float = 0.0        # fwd+bwd FLOPs/batch of the whole model
     full_param_bytes: float = 0.0  # whole-model parameter bytes
+    z_elems: np.ndarray | None = None      # activation elements per batch
+    label_bytes: float = 0.0               # raw label bytes per batch
+    param_elems: np.ndarray | None = None  # client-side parameter count
+    full_param_elems: float = 0.0          # whole-model parameter count
 
     @property
     def n_tiers(self) -> int:
@@ -120,7 +129,7 @@ def resnet_tier_costs(cfg, batch_size: int) -> TierCostTable:
         return p
 
     n_tiers = cfg.n_modules - 1
-    cf, sf, zb, pb = [], [], [], []
+    cf, sf, zb, pb, ze, pe = [], [], [], [], [], []
     total_fwd = stem_flops + sum(per_block)
     for tier in range(1, n_tiers + 1):
         nb = R.n_blocks_in_modules(cfg, tier)
@@ -130,9 +139,11 @@ def resnet_tier_costs(cfg, batch_size: int) -> TierCostTable:
         hw_out = hws[nb - 1] if nb else hw
         cf.append(3.0 * batch_size * (c_fwd + 2 * cout * cfg.n_classes))  # fwd+bwd ~3x
         sf.append(3.0 * batch_size * (s_fwd + 2 * 16 * cfg.width * cfg.n_classes))
+        ze.append(batch_size * hw_out * cout)
         zb.append(batch_size * hw_out * cout * BYTES_PER_PARAM + batch_size * 4)
         stem_p = 27 * cfg.width
         c_params = stem_p + sum(params_of(b) for b in plan[:nb]) + cout * cfg.n_classes
+        pe.append(c_params)
         pb.append(c_params * BYTES_PER_PARAM)
     full_flops = 3.0 * batch_size * (total_fwd + 2 * 16 * cfg.width * cfg.n_classes)
     full_params = 27 * cfg.width + sum(params_of(b) for b in plan) + 16 * cfg.width * cfg.n_classes
@@ -144,6 +155,8 @@ def resnet_tier_costs(cfg, batch_size: int) -> TierCostTable:
         # a full-model client pays the same fixed per-batch overhead
         full_flops=full_flops + overhead,
         full_param_bytes=full_params * BYTES_PER_PARAM,
+        z_elems=np.array(ze, float), label_bytes=float(batch_size * 4),
+        param_elems=np.array(pe, float), full_param_elems=float(full_params),
     )
 
 
@@ -179,7 +192,7 @@ def transformer_tier_costs(cfg, batch_size: int, seq_len: int) -> TierCostTable:
         else 4 * tokens * min(seq_len, cfg.window or seq_len) * cfg.n_heads * cfg.resolved_head_dim
     )
 
-    cf, sf, zb, pb = [], [], [], []
+    cf, sf, zb, pb, ze, pe = [], [], [], [], [], []
     head_params = head_p if head_p else embed_p  # tied models still pay head FLOPs
     for tier in range(1, n_tiers + 1):
         s = bounds[tier - 1]
@@ -191,7 +204,9 @@ def transformer_tier_costs(cfg, batch_size: int, seq_len: int) -> TierCostTable:
             6.0 * (s_active + head_params) * tokens
             + 3 * attn_flops * (cfg.n_layers - s) / cfg.n_layers
         )
+        ze.append(tokens * cfg.d_model)
         zb.append(tokens * cfg.d_model * 2 + tokens * 4)  # bf16 activations + labels
+        pe.append(per_layer * s + embed_p)
         pb.append((per_layer * s + embed_p) * BYTES_PER_PARAM)
     from repro.models import model as Mm
 
@@ -204,6 +219,8 @@ def transformer_tier_costs(cfg, batch_size: int, seq_len: int) -> TierCostTable:
         cf_adj, np.array(sf), np.array(zb), np.array(pb),
         full_flops=6.0 * full_active * tokens + 3 * attn_flops + overhead,
         full_param_bytes=full_total * BYTES_PER_PARAM,
+        z_elems=np.array(ze, float), label_bytes=float(tokens * 4),
+        param_elems=np.array(pe, float), full_param_elems=float(full_total),
     )
 
 
@@ -235,13 +252,20 @@ def simulate_client_times(
     *,
     server_flops: float = SERVER_FLOPS,
     n_sharing: int = 1,
+    wires=None,
 ) -> dict:
     """Ground-truth times for one client & tier (0-based tier index).
 
     ``n_sharing``: how many clients' server-side models the (finite) server
-    trains concurrently this round — its capacity is divided among them."""
+    trains concurrently this round — its capacity is divided among them.
+    ``wires``: a ``codec.WireSizes`` pricing the wires under a compression
+    codec; None keeps the legacy identity accounting (same numbers)."""
     t_c = costs.client_flops[tier] * n_batches / profile.flops
-    t_com = costs.d_size(tier, n_batches) * n_batches / profile.bytes_per_s
+    if wires is None:
+        comm_bytes = costs.d_size(tier, n_batches) * n_batches
+    else:
+        comm_bytes = wires.z_bytes[tier] * n_batches + wires.param_bytes[tier]
+    t_com = comm_bytes / profile.bytes_per_s
     t_s = costs.server_flops[tier] * n_batches / (server_flops / max(n_sharing, 1))
     return {
         "client": t_c,
@@ -275,17 +299,23 @@ def simulate_client_times_batch(
     *,
     server_flops: float = SERVER_FLOPS,
     n_sharing: int = 1,
+    wires=None,
 ) -> dict:
     """Vectorized :func:`simulate_client_times` over a round's participants.
 
     All array arguments are per-client; returns a dict of per-client arrays
     with the exact same formulas (so scheduler observations are identical to
-    the scalar path)."""
+    the scalar path). ``wires`` prices the wires under a compression codec
+    (``codec.WireSizes``); None keeps the legacy identity accounting."""
     tiers = np.asarray(tiers, int)
     nb = np.asarray(n_batches, float)
-    d = costs.z_bytes[tiers] + costs.client_param_bytes[tiers] / np.maximum(nb, 1)
+    if wires is None:
+        comm_bytes = (costs.z_bytes[tiers] * nb
+                      + costs.client_param_bytes[tiers])
+    else:
+        comm_bytes = wires.z_bytes[tiers] * nb + wires.param_bytes[tiers]
     t_c = costs.client_flops[tiers] * nb / np.asarray(flops, float)
-    t_com = d * nb / np.asarray(bytes_per_s, float)
+    t_com = comm_bytes / np.asarray(bytes_per_s, float)
     t_s = costs.server_flops[tiers] * nb / (server_flops / max(n_sharing, 1))
     return {
         "client": t_c,

@@ -16,13 +16,24 @@ def iid_partition(labels: np.ndarray, n_clients: int, seed: int = 0) -> list[np.
 
 def dirichlet_partition(
     labels: np.ndarray, n_clients: int, alpha: float = 0.5, seed: int = 0,
-    min_size: int = 2,
+    min_size: int = 2, max_tries: int = 100,
 ) -> list[np.ndarray]:
     """Label-skew partition: for each class, split its samples across clients
-    with Dirichlet(alpha) proportions (He et al. 2020b / paper A.4)."""
-    rng = np.random.default_rng(seed)
+    with Dirichlet(alpha) proportions (He et al. 2020b / paper A.4).
+
+    The ``min_size`` rejection loop is bounded: each attempt reseeds
+    deterministically (attempt 0 draws exactly what an unbounded loop's
+    first pass drew, so existing partitions are unchanged), and after
+    ``max_tries`` failures a clear error replaces the old infinite spin —
+    with few samples or many clients the constraint can be unsatisfiable.
+    """
+    if n_clients * min_size > len(labels):
+        raise ValueError(
+            f"dirichlet_partition: {n_clients} clients x min_size {min_size} "
+            f"needs >= {n_clients * min_size} samples, got {len(labels)}")
     n_classes = int(labels.max()) + 1
-    while True:
+    for attempt in range(max_tries):
+        rng = np.random.default_rng(seed + 1_000_003 * attempt)
         parts: list[list[int]] = [[] for _ in range(n_clients)]
         for c in range(n_classes):
             idx_c = np.flatnonzero(labels == c)
@@ -33,6 +44,10 @@ def dirichlet_partition(
                 parts[k].extend(chunk.tolist())
         if min(len(p) for p in parts) >= min_size:
             return [np.sort(np.array(p)) for p in parts]
+    raise ValueError(
+        f"dirichlet_partition: no partition with min_size={min_size} after "
+        f"{max_tries} attempts (n={len(labels)}, n_clients={n_clients}, "
+        f"alpha={alpha}); lower min_size/n_clients or raise max_tries")
 
 
 def label_histogram(labels: np.ndarray, parts: list[np.ndarray]) -> np.ndarray:

@@ -32,6 +32,14 @@ def materialize_round(dataset, r: int, local_epochs: int) -> dict:
 
 
 class ClientDataset:
+    """Batches are FIXED-SHAPE: a client with fewer than ``batch_size``
+    samples (common under Dirichlet non-IID) pads its one batch up to
+    ``batch_size`` with zero samples and carries a per-sample ``mask``
+    (1 real / 0 pad) that the losses honor (core/local_loss.py:
+    ``token_xent(..., weight=)``). Without the padding, every odd partial
+    shape became its own (tier, shape) cohort compile and defeated the
+    sharded plane's padding."""
+
     def __init__(self, task: ClassImageTask, labels: np.ndarray, indices: np.ndarray,
                  batch_size: int, seed: int = 0):
         self.task = task
@@ -56,7 +64,13 @@ class ClientDataset:
                 break
             y = self.labels[sel]
             x = self.task.sample(y, seed=int(rng.integers(1 << 31)))
-            yield {"images": x, "labels": y.astype(np.int32)}
+            mask = np.ones(self.batch_size, np.float32)
+            if len(sel) < self.batch_size:
+                pad = self.batch_size - len(sel)
+                x = np.concatenate([x, np.zeros((pad,) + x.shape[1:], x.dtype)])
+                y = np.concatenate([y, np.zeros(pad, y.dtype)])
+                mask[len(sel):] = 0.0
+            yield {"images": x, "labels": y.astype(np.int32), "mask": mask}
 
 
 def make_eval_batch(task: ClassImageTask, n: int, seed: int = 1234) -> dict:

@@ -32,8 +32,10 @@ class DTFLStepState(NamedTuple):
     s_opt: Any
 
 
-def _xent_logits(logits, labels):
-    return token_xent(logits, labels)
+def _xent_logits(logits, labels, weight=None):
+    # weight = the pad mask of fixed-shape partial batches (data/pipeline.py);
+    # eval batches and LM batches carry no mask -> plain mean
+    return token_xent(logits, labels, weight=weight)
 
 
 def _acc(logits, labels):
@@ -82,10 +84,12 @@ class ResNetAdapter:
         else:
             z_up = z
         logits = R.aux_apply(ap, z)
-        loss = _xent_logits(logits, batch["labels"])
+        loss = _xent_logits(logits, batch["labels"], batch.get("mask"))
         if self.dcor_alpha > 0.0:
             from repro.privacy import dcor
 
+            # note: dcor sees padded rows too (undersized clients only);
+            # masking pairwise distances is not worth the regularizer's noise
             loss = (1 - self.dcor_alpha) * loss + self.dcor_alpha * dcor(
                 batch["images"], z
             )
@@ -93,10 +97,11 @@ class ResNetAdapter:
 
     def server_loss(self, sp: Params, z: jax.Array, batch: dict, tier: int):
         logits = R.server_forward(sp, self.cfg, z, tier + 1)
-        return _xent_logits(logits, batch["labels"])
+        return _xent_logits(logits, batch["labels"], batch.get("mask"))
 
     def full_loss(self, params: Params, batch: dict):
-        return _xent_logits(R.forward(params, self.cfg, batch["images"]), batch["labels"])
+        return _xent_logits(R.forward(params, self.cfg, batch["images"]),
+                            batch["labels"], batch.get("mask"))
 
     def eval_acc(self, params: Params, batch: dict) -> jax.Array:
         return _acc(R.forward(params, self.cfg, batch["images"]), batch["labels"])
@@ -147,7 +152,7 @@ class TransformerAdapter:
     def client_loss(self, cp: Params, ap: Params, batch: dict, rng=None):
         z, moe_aux = M.client_forward(cp, self.cfg, batch)
         logits = M.aux_head_apply(ap, self.cfg, z)
-        loss = _xent_logits(logits, batch["labels"]) + 0.01 * moe_aux
+        loss = _xent_logits(logits, batch["labels"], batch.get("mask")) + 0.01 * moe_aux
         if self.dcor_alpha > 0.0:
             from repro.privacy import dcor
 
@@ -158,11 +163,11 @@ class TransformerAdapter:
 
     def server_loss(self, sp: Params, z, batch: dict, tier: int):
         logits, moe_aux = M.server_forward(sp, self.cfg, z)
-        return _xent_logits(logits, batch["labels"]) + 0.01 * moe_aux
+        return _xent_logits(logits, batch["labels"], batch.get("mask")) + 0.01 * moe_aux
 
     def full_loss(self, params: Params, batch: dict):
         logits, moe_aux = M.forward(params, self.cfg, batch)
-        return _xent_logits(logits, batch["labels"]) + 0.01 * moe_aux
+        return _xent_logits(logits, batch["labels"], batch.get("mask")) + 0.01 * moe_aux
 
     def eval_acc(self, params: Params, batch: dict) -> jax.Array:
         logits, _ = M.forward(params, self.cfg, batch)

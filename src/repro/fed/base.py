@@ -11,6 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aggregation, timemodel
+from repro.core import codec as codec_lib
 from repro.data import pipeline
 from repro.fed import cohort as cohort_engine
 from repro.fed import engine as event_engine
@@ -19,12 +20,20 @@ from repro.fed.engine import RoundLog, RoundPlan
 from repro.fed.execplan import ExecPlan
 
 
-def kd_loss(student_logits: jax.Array, teacher_logits: jax.Array, temp: float = 1.0) -> jax.Array:
-    """KL(teacher || student) with temperature."""
+def kd_loss(student_logits: jax.Array, teacher_logits: jax.Array, temp: float = 1.0,
+            weight: jax.Array | None = None) -> jax.Array:
+    """KL(teacher || student) with temperature. ``weight`` (per-sample, e.g.
+    the fixed-shape pad mask from data/pipeline.py) turns the mean over rows
+    into a weighted mean so padded samples contribute nothing."""
     t = jax.nn.softmax(teacher_logits.astype(jnp.float32) / temp, -1)
     ls = jax.nn.log_softmax(student_logits.astype(jnp.float32) / temp, -1)
     lt = jax.nn.log_softmax(teacher_logits.astype(jnp.float32) / temp, -1)
-    return jnp.mean(jnp.sum(t * (lt - ls), -1)) * temp * temp
+    per = jnp.sum(t * (lt - ls), -1)
+    if weight is None:
+        return jnp.mean(per) * temp * temp
+    w = weight.astype(jnp.float32)
+    w = jnp.broadcast_to(w.reshape(w.shape + (1,) * (per.ndim - w.ndim)), per.shape)
+    return jnp.sum(per * w) / jnp.maximum(jnp.sum(w), 1.0) * temp * temp
 
 
 class BaseTrainer:
@@ -37,11 +46,18 @@ class BaseTrainer:
     # server optimizer, fedgkt's KD phases, tifl/drop30's selection) must
     # NOT silently degrade to FedAvg under engine="async".
     supports_async = True
+    # whether the codec plane's wires map onto this algorithm's round
+    # structure. SplitFed's per-batch gradient round-trip and FedGKT's
+    # bespoke two-phase KD protocol are NOT the download/upload wires the
+    # codec contract compresses, so they reject non-identity codecs rather
+    # than silently mis-pricing them.
+    supports_codec = True
 
     def __init__(self, adapter, clients: list[SimClient], env: HeteroEnv, optimizer,
                  *, seed: int = 0, local_epochs: int = 1,
                  server_flops: float = timemodel.SERVER_FLOPS,
-                 exec_plan: ExecPlan | str | None = None):
+                 exec_plan: ExecPlan | str | None = None,
+                 codec: codec_lib.Codec | str | None = None):
         self.adapter = adapter
         self.clients = clients
         self.env = env
@@ -53,6 +69,17 @@ class BaseTrainer:
         self.key = jax.random.PRNGKey(seed)
         self.params = adapter.init_global(self._next_key())
         self.costs = adapter.tier_costs(clients[0].dataset.batch_size)
+        # communication plane (core/codec.py): download the codec'd global,
+        # upload codec'd deltas, price both wires with codec-true bytes
+        self.codec = codec_lib.make_codec(codec)
+        if not self.supports_codec and not self.codec.is_identity:
+            raise ValueError(
+                f"{self.name} does not support wire compression (codec="
+                f"{self.codec.name!r}); its round structure is not the "
+                "download/update-upload contract the codec plane compresses")
+        self.wires = codec_lib.wire_sizes(self.costs, self.codec)
+        self._ef: dict[int, dict] = {}     # cid -> error-feedback residual
+        self.last_uplink_bytes = 0.0
 
     def _next_key(self):
         self.key, k = jax.random.split(self.key)
@@ -77,6 +104,8 @@ class BaseTrainer:
         self.env.maybe_switch(r)
         trained = list(self.select_clients(r, participants))
         times = np.array([self.client_time(k) for k in trained], float)
+        # full-model uplink = one codec'd update upload per trained client
+        self.last_uplink_bytes = float(self.wires.full_up * len(trained))
         return RoundPlan(
             participants=list(participants), trained=trained,
             assign={k: 0 for k in trained}, times=times,
@@ -115,14 +144,38 @@ class BaseTrainer:
         return float(plan.times.max()) + extra
 
     # ------------------------------------------------------------------
+    # error-feedback state (stateful codecs): one full-model-shaped
+    # residual per client, host-side
+    # ------------------------------------------------------------------
+    def _client_ef(self, cid: int):
+        st = self._ef.get(cid)
+        if st is not None:
+            return st
+        return jax.tree.map(lambda x: np.zeros(x.shape, x.dtype), self.params)
+
+    def _gather_ef(self, co):
+        trees = [self._client_ef(k) for k in co.cids]
+        if co.n_pad:
+            trees += [jax.tree.map(np.zeros_like, trees[0])] * co.n_pad
+        return jax.tree.map(
+            lambda *xs: np.stack([np.asarray(x) for x in xs]), *trees)
+
+    def _scatter_ef(self, co, ef) -> None:
+        for i, cid in enumerate(co.cids):
+            self._ef[cid] = jax.tree.map(lambda x: np.asarray(x[i]), ef)
+
+    # ------------------------------------------------------------------
     # resumable training state (engine.save_train_state envelope body)
     # ------------------------------------------------------------------
     def save_state(self) -> dict:
         """Everything a deterministic resume needs: params, the trainer's jax
         RNG key, and the env's profile state. Subclasses with extra server
         state (FedYogi's optimizer, DTFL's aux heads / scheduler) extend."""
-        return {"params": self.params, "key": np.asarray(self.key),
-                "env": self.env.save_state()}
+        state = {"params": self.params, "key": np.asarray(self.key),
+                 "env": self.env.save_state()}
+        if self.codec.stateful:
+            state["ef"] = {str(cid): t for cid, t in self._ef.items()}
+        return state
 
     def load_state(self, state: dict) -> None:
         self.params = state["params"]
@@ -130,6 +183,8 @@ class BaseTrainer:
             self.key = jnp.asarray(state["key"])
         if "env" in state:
             self.env.load_state(state["env"])
+        if "ef" in state:
+            self._ef = {int(cid): t for cid, t in state["ef"].items()}
 
     def save(self, path: str) -> None:
         from repro import checkpoint as ckpt
@@ -174,14 +229,18 @@ class BaseTrainer:
     # time helpers (analytic, from the shared cost table)
     # ------------------------------------------------------------------
     def _full_model_time(self, cid: int, n_batches: int) -> float:
-        """FedAvg-style: the client trains the ENTIRE model locally."""
+        """FedAvg-style: the client trains the ENTIRE model locally. The
+        comm term prices the codec-true download + update upload (identity:
+        the legacy ``2 * full_param_bytes``)."""
         prof = self.env.profile(cid)
         compute = self.costs.full_flops * n_batches * self.local_epochs / prof.flops
-        comm = 2.0 * self.costs.full_param_bytes / prof.bytes_per_s
+        comm = (self.wires.full_down + self.wires.full_up) / prof.bytes_per_s
         return compute + comm
 
     def _local_full_steps(self, r: int, cid: int, params):
-        """Run local_epochs of full-model SGD for one client; returns params."""
+        """Run local_epochs of full-model SGD for one client; returns the
+        client's (codec'd) upload. The codec's download wire round-trips the
+        global before training; the upload wire round-trips the delta."""
         if not hasattr(self, "_full_step"):
             ad, opt = self.adapter, self.opt
 
@@ -192,6 +251,8 @@ class BaseTrainer:
                 return p, o, loss
 
             self._full_step = step
+        ref = self.codec.tree_down_rt(params)             # download wire
+        params = ref
         o = self.opt.init(params)
         for e in range(self.local_epochs):
             for batch in self.clients[cid].dataset.epoch(
@@ -199,7 +260,11 @@ class BaseTrainer:
             ):
                 batch = {k: jnp.asarray(v) for k, v in batch.items()}
                 params, o, _ = self._full_step(params, o, batch)
-        return params
+        ef = self._client_ef(cid) if self.codec.stateful else None
+        up, ef2 = codec_lib.uplink_rt_one(self.codec, params, ref, ef)
+        if self.codec.stateful:
+            self._ef[cid] = jax.tree.map(np.asarray, ef2)
+        return up
 
     # ------------------------------------------------------------------
     # cohort / sharded engine paths (same math as _local_full_steps)
@@ -239,26 +304,54 @@ class BaseTrainer:
         if self.exec_plan.mode == "sharded":
             sums, totals = [], []
             for co in cohorts:
-                s, t = self._full_sharded_program()(
-                    self.params, co.batches, co.mask,
-                    co.client_weights(self.clients),
-                )
+                if self.codec.stateful:
+                    ef = self._gather_ef(co)
+                    s, t, ef2 = self._full_sharded_program()(
+                        self.params, co.batches, co.mask,
+                        co.client_weights(self.clients), ef,
+                    )
+                    self._scatter_ef(co, ef2)
+                else:
+                    s, t = self._full_sharded_program()(
+                        self.params, co.batches, co.mask,
+                        co.client_weights(self.clients),
+                    )
                 sums.append(s)
                 totals.append(t)
             return aggregation.combine_weighted_sums(sums, totals, like=self.params)
         if not hasattr(self, "_full_cohort_program"):
-            step, opt = self._full_step_fn(), self.opt
+            step, opt, codec = self._full_step_fn(), self.opt, self.codec
 
-            @jax.jit
-            def run(params, batches, mask):
-                state = {"p": params, "o": opt.init(params)}
+            def body(params, batches, mask):
+                ref = codec.tree_down_rt(params)          # download wire
+                state = {"p": ref, "o": opt.init(ref)}
                 final, _ = cohort_engine.run_cohort(step, state, batches, mask)
-                return final["p"]
+                return ref, final["p"]
+
+            if codec.stateful:
+                @jax.jit
+                def run(params, batches, mask, ef):
+                    ref, trained = body(params, batches, mask)
+                    up, ef2 = codec_lib.uplink_rt_ef(codec, trained, ref, ef)
+                    return up, ef2
+            else:
+                @jax.jit
+                def run(params, batches, mask):
+                    ref, trained = body(params, batches, mask)
+                    return codec_lib.uplink_rt(codec, trained, ref)
 
             self._full_cohort_program = run
         trees, ws = [], []
         for co in cohorts:
-            trees.append(self._full_cohort_program(self.params, co.batches, co.mask))
+            if self.codec.stateful:
+                ef = self._gather_ef(co)
+                up, ef2 = self._full_cohort_program(
+                    self.params, co.batches, co.mask, ef)
+                self._scatter_ef(co, ef2)
+                trees.append(up)
+            else:
+                trees.append(
+                    self._full_cohort_program(self.params, co.batches, co.mask))
             ws.append([weigh(k) for k in co.cids])
         return aggregation.weighted_average_cohorts(trees, ws)
 
@@ -266,15 +359,36 @@ class BaseTrainer:
         """One jitted shard_map program: the full-model cohort scan with its
         client axis split over the plan's mesh; the N_k-weighted parameter
         sum and the weight total leave the device pre-reduced (psum), so
-        per-client trees never materialize on host."""
+        per-client trees never materialize on host. Codec wires apply as in
+        the cohort program; error-feedback residuals travel client-sharded."""
         if not hasattr(self, "_full_sharded"):
             step, opt, plan = self._full_step_fn(), self.opt, self.exec_plan
+            codec = self.codec
 
-            def local(params, batches, mask, weights):
-                state = {"p": params, "o": opt.init(params)}
+            def train_shard(params, batches, mask):
+                ref = codec.tree_down_rt(params)          # download wire
+                state = {"p": ref, "o": opt.init(ref)}
                 final, _ = cohort_engine.run_cohort(step, state, batches, mask)
-                return (plan.psum_tree(final["p"], scaled_by=weights),
-                        plan.psum_scalar(weights.sum()))
+                return ref, final["p"]
 
-            self._full_sharded = jax.jit(plan.shard_cohort_call(local, n_replicated=1))
+            if codec.stateful:
+                def local(params, batches, mask, weights, ef):
+                    ref, trained = train_shard(params, batches, mask)
+                    up, ef2 = codec_lib.uplink_rt_ef(codec, trained, ref, ef)
+                    return (plan.psum_tree(up, scaled_by=weights),
+                            plan.psum_scalar(weights.sum()), ef2)
+
+                self._full_sharded = jax.jit(plan.shard_cohort_call(
+                    local, n_replicated=1, n_client_extra=1,
+                    n_outs=3, client_outs=1,
+                ))
+            else:
+                def local(params, batches, mask, weights):
+                    ref, trained = train_shard(params, batches, mask)
+                    up = codec_lib.uplink_rt(codec, trained, ref)
+                    return (plan.psum_tree(up, scaled_by=weights),
+                            plan.psum_scalar(weights.sum()))
+
+                self._full_sharded = jax.jit(
+                    plan.shard_cohort_call(local, n_replicated=1))
         return self._full_sharded

@@ -17,6 +17,13 @@ Per round:
   4. Halves are merged and FedAvg'd with weights N_k/N; per-tier aux heads
      start each round from the tier's shared head and are weight-averaged
      within their tier cohort afterwards (both execution paths).
+  5. A wire :class:`~repro.core.codec.Codec` (``codec=`` / ``--codec``)
+     compresses the three wires inside the jitted programs — activation
+     uplink z, client-model download, client-update upload (delta-coded,
+     with client-held error feedback for top-k) — and its TRUE byte counts
+     drive both the simulated times and the scheduler's profile, so
+     re-tiering reacts to the compressed compute/comm balance
+     (docs/architecture.md §7).
 """
 from __future__ import annotations
 
@@ -25,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aggregation, timemodel
+from repro.core import codec as codec_lib
 from repro.core.scheduler import DynamicTierScheduler, StaticScheduler, TierProfile
 from repro.data import pipeline
 from repro.fed import cohort as cohort_engine
@@ -50,6 +58,7 @@ class DTFLTrainer:
         local_epochs: int = 1,
         server_flops: float = timemodel.SERVER_FLOPS,
         exec_plan: ExecPlan | str | None = None,
+        codec: codec_lib.Codec | str | None = None,
     ):
         self.adapter = adapter
         self.clients = clients
@@ -60,11 +69,17 @@ class DTFLTrainer:
         self.key = jax.random.PRNGKey(seed)
         self.params = adapter.init_global(self._next_key())
         self.costs = adapter.tier_costs(clients[0].dataset.batch_size)
+        # communication plane: the codec compresses the three wires inside
+        # the jitted programs AND prices them for the time model + scheduler
+        self.codec = codec_lib.make_codec(codec)
+        self.wires = codec_lib.wire_sizes(self.costs, self.codec)
+        self._ef: dict[int, dict] = {}     # cid -> error-feedback residuals
+        self.last_uplink_bytes = 0.0
         profile = TierProfile.from_cost_table(
             self.costs,
-            clients[0].n_batches,
             ref_flops=timemodel.UNIT_FLOPS,
             server_flops=server_flops,
+            wires=self.wires,
         )
         if scheduler == "dynamic":
             self.sched = DynamicTierScheduler(profile, len(clients))
@@ -91,15 +106,18 @@ class DTFLTrainer:
 
     def _raw_step(self, tier: int):
         """Single-client DTFL step for ``tier`` (unjitted; shared by the
-        sequential path and the vmapped cohort program)."""
-        ad, opt = self.adapter, self.opt
+        sequential path and the vmapped cohort program). The activation
+        uplink ``z`` is what actually crosses the network, so the codec
+        round-trips it before the server loss (the client's own aux loss
+        sees the uncompressed local activations)."""
+        ad, opt, codec = self.adapter, self.opt, self.codec
 
         def step(state: DTFLStepState, batch: dict):
             (closs, z), (cg, ag) = jax.value_and_grad(
                 lambda cp, ap: ad.client_loss(cp, ap, batch), argnums=(0, 1),
                 has_aux=True,
             )(state.client, state.aux)
-            z = jax.lax.stop_gradient(z)
+            z = codec.tree_rt(jax.lax.stop_gradient(z))
             sloss, sg = jax.value_and_grad(
                 lambda sp: ad.server_loss(sp, z, batch, tier)
             )(state.server)
@@ -118,20 +136,41 @@ class DTFLTrainer:
     def _cohort_program(self, tier: int):
         """One jitted program per tier: split + optimizer init + vmapped scan
         over the cohort's steps + merge, all fused on device (eager per-leaf
-        dispatch is exactly the overhead the engine removes)."""
+        dispatch is exactly the overhead the engine removes).
+
+        The codec's download wire round-trips (client half, tier aux head)
+        before training and the upload wire round-trips each member's delta
+        before the merge; stateful codecs additionally thread the per-client
+        error-feedback residuals through the program."""
         if tier not in self._cohort_cache:
-            ad, opt = self.adapter, self.opt
+            ad, opt, codec = self.adapter, self.opt, self.codec
             step = self._raw_step(tier)
 
-            @jax.jit
-            def run(params, aux, batches, mask):
+            def body(params, aux, batches, mask):
                 cp, sp = ad.split(params, tier)
+                cp, auxd = codec.tree_down_rt(cp), codec.tree_down_rt(aux)
                 state = DTFLStepState(
-                    cp, aux, sp, opt.init(cp), opt.init(aux), opt.init(sp)
+                    cp, auxd, sp, opt.init(cp), opt.init(auxd), opt.init(sp)
                 )
                 final, _ = cohort_engine.run_cohort(step, state, batches, mask)
-                merged = jax.vmap(ad.merge)(final.client, final.server)
-                return merged, final.aux
+                return cp, auxd, final
+
+            if codec.stateful:
+                @jax.jit
+                def run(params, aux, batches, mask, efc, efa):
+                    cp, auxd, final = body(params, aux, batches, mask)
+                    upc, efc2 = codec_lib.uplink_rt_ef(codec, final.client, cp, efc)
+                    upa, efa2 = codec_lib.uplink_rt_ef(codec, final.aux, auxd, efa)
+                    merged = jax.vmap(ad.merge)(upc, final.server)
+                    return merged, upa, efc2, efa2
+            else:
+                @jax.jit
+                def run(params, aux, batches, mask):
+                    cp, auxd, final = body(params, aux, batches, mask)
+                    upc = codec_lib.uplink_rt(codec, final.client, cp)
+                    upa = codec_lib.uplink_rt(codec, final.aux, auxd)
+                    merged = jax.vmap(ad.merge)(upc, final.server)
+                    return merged, upa
 
             self._cohort_cache[tier] = run
         return self._cohort_cache[tier]
@@ -144,23 +183,46 @@ class DTFLTrainer:
         trees AND tier aux heads — reduce on-device as psum collectives;
         only (sum_tree, aux_sum_tree, weight_total) leave the mesh."""
         if tier not in self._sharded_cache:
-            ad, opt, plan = self.adapter, self.opt, self.exec_plan
+            ad, opt, plan, codec = self.adapter, self.opt, self.exec_plan, self.codec
             step = self._raw_step(tier)
 
-            def local(params, aux, batches, mask, weights):
+            def train_shard(params, aux, batches, mask):
                 cp, sp = ad.split(params, tier)
+                cp, auxd = codec.tree_down_rt(cp), codec.tree_down_rt(aux)
                 state = DTFLStepState(
-                    cp, aux, sp, opt.init(cp), opt.init(aux), opt.init(sp)
+                    cp, auxd, sp, opt.init(cp), opt.init(auxd), opt.init(sp)
                 )
                 final, _ = cohort_engine.run_cohort(step, state, batches, mask)
-                merged = jax.vmap(ad.merge)(final.client, final.server)
-                return (plan.psum_tree(merged, scaled_by=weights),
-                        plan.psum_tree(final.aux, scaled_by=weights),
-                        plan.psum_scalar(weights.sum()))
+                return cp, auxd, final
 
-            self._sharded_cache[tier] = jax.jit(
-                plan.shard_cohort_call(local, n_replicated=2)
-            )
+            if codec.stateful:
+                def local(params, aux, batches, mask, weights, efc, efa):
+                    cp, auxd, final = train_shard(params, aux, batches, mask)
+                    upc, efc2 = codec_lib.uplink_rt_ef(codec, final.client, cp, efc)
+                    upa, efa2 = codec_lib.uplink_rt_ef(codec, final.aux, auxd, efa)
+                    merged = jax.vmap(ad.merge)(upc, final.server)
+                    return (plan.psum_tree(merged, scaled_by=weights),
+                            plan.psum_tree(upa, scaled_by=weights),
+                            plan.psum_scalar(weights.sum()),
+                            efc2, efa2)
+
+                self._sharded_cache[tier] = jax.jit(plan.shard_cohort_call(
+                    local, n_replicated=2, n_client_extra=2,
+                    n_outs=5, client_outs=2,
+                ))
+            else:
+                def local(params, aux, batches, mask, weights):
+                    cp, auxd, final = train_shard(params, aux, batches, mask)
+                    upc = codec_lib.uplink_rt(codec, final.client, cp)
+                    upa = codec_lib.uplink_rt(codec, final.aux, auxd)
+                    merged = jax.vmap(ad.merge)(upc, final.server)
+                    return (plan.psum_tree(merged, scaled_by=weights),
+                            plan.psum_tree(upa, scaled_by=weights),
+                            plan.psum_scalar(weights.sum()))
+
+                self._sharded_cache[tier] = jax.jit(
+                    plan.shard_cohort_call(local, n_replicated=2)
+                )
         return self._sharded_cache[tier]
 
     # ------------------------------------------------------------------
@@ -180,7 +242,11 @@ class DTFLTrainer:
         t = timemodel.simulate_client_times_batch(
             self.costs, tiers, np.array([p.flops for p in profs]), bps, nb,
             server_flops=self.server_flops, n_sharing=len(participants),
+            wires=self.wires,
         )
+        # codec-true client->server bytes of this round (z uplink + update
+        # upload), surfaced per round through RoundLog.uplink_bytes
+        self.last_uplink_bytes = float(self.wires.uplink_bytes(tiers, nb).sum())
         return RoundPlan(
             participants=list(participants), trained=list(participants),
             assign=assign, times=t["total"],
@@ -250,9 +316,17 @@ class DTFLTrainer:
             self.clients, participants, assign, r, self.local_epochs
         )
         for co in cohorts:
-            merged, aux = self._cohort_program(co.tier)(
-                self.params, self.aux[co.tier], co.batches, co.mask
-            )
+            if self.codec.stateful:
+                efc, efa = self._gather_ef(co)
+                merged, aux, efc2, efa2 = self._cohort_program(co.tier)(
+                    self.params, self.aux[co.tier], co.batches, co.mask,
+                    efc, efa,
+                )
+                self._scatter_ef(co, efc2, efa2)
+            else:
+                merged, aux = self._cohort_program(co.tier)(
+                    self.params, self.aux[co.tier], co.batches, co.mask
+                )
             w = [len(self.clients[k].dataset) for k in co.cids]
             merged_trees.append(merged)
             merged_ws.append(w)
@@ -279,9 +353,17 @@ class DTFLTrainer:
         )
         for co in cohorts:
             w = co.client_weights(self.clients)
-            msum, asum, wtot = self._sharded_program(co.tier)(
-                self.params, self.aux[co.tier], co.batches, co.mask, w
-            )
+            if self.codec.stateful:
+                efc, efa = self._gather_ef(co)
+                msum, asum, wtot, efc2, efa2 = self._sharded_program(co.tier)(
+                    self.params, self.aux[co.tier], co.batches, co.mask, w,
+                    efc, efa,
+                )
+                self._scatter_ef(co, efc2, efa2)
+            else:
+                msum, asum, wtot = self._sharded_program(co.tier)(
+                    self.params, self.aux[co.tier], co.batches, co.mask, w
+                )
             sums.append(msum)
             totals.append(wtot)
             aux_by_tier.setdefault(co.tier, []).append((asum, wtot))
@@ -300,23 +382,73 @@ class DTFLTrainer:
             tier = assign[k]
             cl = self.clients[k]
             cp, sp = self.adapter.split(self.params, tier)
+            cp = self.codec.tree_down_rt(cp)                  # download wire
+            auxd = self.codec.tree_down_rt(round_aux[tier])
             state = DTFLStepState(
-                cp, round_aux[tier], sp,
-                self.opt.init(cp), self.opt.init(round_aux[tier]), self.opt.init(sp),
+                cp, auxd, sp,
+                self.opt.init(cp), self.opt.init(auxd), self.opt.init(sp),
             )
             step = self._tier_step(tier)
             for e in range(self.local_epochs):
                 for batch in cl.dataset.epoch(r * pipeline.ROUND_SEED_STRIDE + e):
                     batch = {k2: jnp.asarray(v) for k2, v in batch.items()}
                     state, _ = step(state, batch)
-            aux_by_tier.setdefault(tier, []).append((state.aux, len(cl.dataset)))
-            merged.append(self.adapter.merge(state.client, state.server))
+            # upload wire (with error feedback for stateful codecs)
+            efc = efa = None
+            if self.codec.stateful:
+                efc, efa = self._client_ef(k, tier)
+            upc, efc2 = codec_lib.uplink_rt_one(self.codec, state.client, cp, efc)
+            upa, efa2 = codec_lib.uplink_rt_one(self.codec, state.aux, auxd, efa)
+            if self.codec.stateful:
+                self._ef[k] = {
+                    "tier": tier,
+                    "c": jax.tree.map(np.asarray, efc2),
+                    "a": jax.tree.map(np.asarray, efa2),
+                }
+            aux_by_tier.setdefault(tier, []).append((upa, len(cl.dataset)))
+            merged.append(self.adapter.merge(upc, state.server))
             weights.append(len(cl.dataset))
         for tier, parts in aux_by_tier.items():
             self.aux[tier] = aggregation.weighted_average(
                 [a for a, _ in parts], [w for _, w in parts]
             )
         return aggregation.weighted_average(merged, weights)
+
+    # ------------------------------------------------------------------
+    # error-feedback state (stateful codecs): residuals live host-side per
+    # client, shaped like the client's CURRENT tier halves — a re-tiered
+    # client's residual no longer matches its upload shapes and is reset
+    # (the standard EF answer to a topology change)
+    # ------------------------------------------------------------------
+    def _client_ef(self, cid: int, tier: int):
+        """This client's (client-half, aux) residuals for ``tier`` — zeros
+        if it has none yet or was re-tiered since."""
+        st = self._ef.get(cid)
+        if st is not None and st["tier"] == tier:
+            return st["c"], st["a"]
+        cp, _ = self.adapter.split(self.params, tier)
+        zero = lambda t: jax.tree.map(lambda x: np.zeros(x.shape, x.dtype), t)
+        return zero(cp), zero(self.aux[tier])
+
+    def _gather_ef(self, co):
+        """Stack the cohort's residuals along the client axis (zeros for the
+        sharded plane's pad clients)."""
+        pairs = [self._client_ef(k, co.tier) for k in co.cids]
+        if co.n_pad:
+            zc = jax.tree.map(np.zeros_like, pairs[0][0])
+            za = jax.tree.map(np.zeros_like, pairs[0][1])
+            pairs += [(zc, za)] * co.n_pad
+        stack = lambda trees: jax.tree.map(
+            lambda *xs: np.stack([np.asarray(x) for x in xs]), *trees)
+        return stack([c for c, _ in pairs]), stack([a for _, a in pairs])
+
+    def _scatter_ef(self, co, efc, efa) -> None:
+        for i, cid in enumerate(co.cids):
+            self._ef[cid] = {
+                "tier": co.tier,
+                "c": jax.tree.map(lambda x: np.asarray(x[i]), efc),
+                "a": jax.tree.map(lambda x: np.asarray(x[i]), efa),
+            }
 
     # ------------------------------------------------------------------
     # checkpointing (server state: global params + per-tier aux heads +
@@ -344,6 +476,14 @@ class DTFLTrainer:
                 "ema_keys": np.array(ema_t or [[0, 0]][:0]).reshape(-1, 2),
                 "ema_vals": np.array(ema_v),
             }
+        if self.codec.stateful:
+            # error-feedback residuals ride the envelope so --resume
+            # continues the compressed-upload stream bit-deterministically
+            state["ef"] = {
+                str(cid): {"tier": np.int64(st["tier"]),
+                           "c": st["c"], "a": st["a"]}
+                for cid, st in self._ef.items()
+            }
         return state
 
     def load_state(self, state: dict) -> None:
@@ -367,6 +507,11 @@ class DTFLTrainer:
                 e = EMA()
                 e.value = float(v)
                 self.sched.clients[int(cid)].ema[int(tier)] = e
+        if "ef" in state:
+            self._ef = {
+                int(cid): {"tier": int(st["tier"]), "c": st["c"], "a": st["a"]}
+                for cid, st in state["ef"].items()
+            }
 
     def save(self, path: str) -> None:
         from repro import checkpoint as ckpt

@@ -63,6 +63,9 @@ class RoundLog:
     acc: float
     assignment: dict[int, int]
     straggler: float
+    # codec-true client->server bytes planned for the round (z uplink +
+    # update upload; fed/dtfl.py / fed/base.py set it in plan_round)
+    uplink_bytes: float = 0.0
 
 
 @dataclass
@@ -191,7 +194,8 @@ def run_rounds(
         clock += straggler
         acc = float(eval_fn(trainer.params, eval_batch)) if r % eval_every == 0 else (
             logs[-1].acc if logs else last_acc)
-        logs.append(RoundLog(r, clock, acc, assign, straggler))
+        logs.append(RoundLog(r, clock, acc, assign, straggler,
+                             uplink_bytes=getattr(trainer, "last_uplink_bytes", 0.0)))
         next_round = r + 1
         if verbose:
             tiers = f" tiers={sorted(set(assign.values()))}" if assign else ""
@@ -324,7 +328,10 @@ def run_events(
         acc = float(eval_fn(trainer.params, eval_batch)) if r % eval_every == 0 else (
             logs[-1].acc if logs else last_acc
         )
-        logs.append(RoundLog(r, q.now, acc, plan.assign if hasattr(trainer, "sched") else {}, straggler))
+        logs.append(RoundLog(r, q.now, acc,
+                             plan.assign if hasattr(trainer, "sched") else {},
+                             straggler,
+                             uplink_bytes=getattr(trainer, "last_uplink_bytes", 0.0)))
         next_round = r + 1
         if verbose:
             dropped = len(plan.trained) - len(trained)
@@ -403,7 +410,8 @@ def run_async(
     )
     q.advance_to(float(plan0.times.max()))
     acc = float(eval_fn(trainer.params, eval_batch))
-    logs.append(RoundLog(0, q.now, acc, plan0.assign, float(plan0.times.max())))
+    logs.append(RoundLog(0, q.now, acc, plan0.assign, float(plan0.times.max()),
+                         uplink_bytes=getattr(trainer, "last_uplink_bytes", 0.0)))
     if target_acc is not None and acc >= target_acc:
         return logs
 
@@ -490,7 +498,8 @@ def run_async(
             merges += 1
             acc = float(eval_fn(trainer.params, eval_batch)) if (
                 merges % eval_every == 0) else logs[-1].acc
-            logs.append(RoundLog(merges, q.now, acc, dict(plan.assign), wave_time))
+            logs.append(RoundLog(merges, q.now, acc, dict(plan.assign), wave_time,
+                                 uplink_bytes=getattr(trainer, "last_uplink_bytes", 0.0)))
             if verbose:
                 print(f"[async:{trainer.name}] merge={merges} group={g} "
                       f"clock={q.now:.0f}s acc={acc:.3f}")

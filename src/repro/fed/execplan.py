@@ -102,21 +102,38 @@ class ExecPlan:
     # ------------------------------------------------------------------
     # shard_map plumbing (the one place PartitionSpecs live)
     # ------------------------------------------------------------------
-    def shard_cohort_call(self, local_fn, n_replicated: int = 0):
-        """Wrap ``local_fn(*replicated, batches, mask, weights) -> out`` so the
-        cohort arguments arrive client-sharded and the output replicated.
+    def shard_cohort_call(self, local_fn, n_replicated: int = 0,
+                          n_client_extra: int = 0, n_outs: int = 1,
+                          client_outs: int = 0):
+        """Wrap ``local_fn(*replicated, batches, mask, weights, *client_extra)
+        -> out`` so the cohort arguments arrive client-sharded and the
+        reduced outputs leave replicated.
 
         ``local_fn`` sees per-shard slices: batches ``(S, C/n, ...)``, mask
-        ``(S, C/n)``, weights ``(C/n,)``; it must reduce its outputs across
-        ``self.axis`` itself (``psum_tree`` / ``lax.psum``) so the replicated
-        out_specs hold. The first ``n_replicated`` arguments (global params,
-        tier aux heads, ...) are broadcast to every shard unchanged.
+        ``(S, C/n)``, weights ``(C/n,)``; it must reduce its cross-client
+        outputs across ``self.axis`` itself (``psum_tree`` / ``lax.psum``)
+        so the replicated out_specs hold. The first ``n_replicated``
+        arguments (global params, tier aux heads, ...) are broadcast to
+        every shard unchanged.
+
+        ``n_client_extra`` trailing arguments carry additional per-client
+        state pytrees (leading client axis — the codec plane's
+        error-feedback residuals) sharded like the cohort; the LAST
+        ``client_outs`` of the ``n_outs`` outputs are per-client pytrees
+        that come back sharded (everything before them is psum-reduced and
+        replicated).
         """
         rep = (P(),) * n_replicated
+        in_specs = (rep
+                    + (P(None, self.axis), P(None, self.axis), P(self.axis))
+                    + (P(self.axis),) * n_client_extra)
+        if client_outs:
+            out_specs = tuple([P()] * (n_outs - client_outs)
+                              + [P(self.axis)] * client_outs)
+        else:
+            out_specs = P()
         return shard_map(
-            local_fn, mesh=self.mesh,
-            in_specs=rep + (P(None, self.axis), P(None, self.axis), P(self.axis)),
-            out_specs=P(),
+            local_fn, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs,
         )
 
     def psum_tree(self, tree, scaled_by=None):

@@ -32,6 +32,8 @@ KD_WEIGHT = 0.5
 class FedGKTTrainer(BaseTrainer):
     name = "fedgkt"
     supports_async = False  # algorithm lives outside train_group
+    supports_codec = False  # bespoke (z, y, logits) KD protocol, not the
+                            # codec plane's download/update-upload wires
 
     def __init__(self, *args, **kw):
         super().__init__(*args, **kw)
@@ -53,8 +55,9 @@ class FedGKTTrainer(BaseTrainer):
             def loss_fn(cp, ap):
                 z = ad.client_features(cp, batch)
                 logits = ad.aux_logits(ap, z)
-                ce = token_xent(logits, batch["labels"])
-                kd = jnp.where(use_kd, kd_loss(logits, teacher), 0.0)
+                ce = token_xent(logits, batch["labels"], weight=batch.get("mask"))
+                kd = jnp.where(
+                    use_kd, kd_loss(logits, teacher, weight=batch.get("mask")), 0.0)
                 return ce + KD_WEIGHT * kd, (z, logits)
 
             (_, (z, logits)), (cg, ag) = jax.value_and_grad(
@@ -68,8 +71,9 @@ class FedGKTTrainer(BaseTrainer):
         def sstep(sp, so, z, batch, client_logits):
             def loss_fn(sp):
                 logits = ad.server_logits(sp, z, SPLIT_TIER)
-                ce = token_xent(logits, batch["labels"])
-                return ce + KD_WEIGHT * kd_loss(logits, client_logits), logits
+                ce = token_xent(logits, batch["labels"], weight=batch.get("mask"))
+                return ce + KD_WEIGHT * kd_loss(
+                    logits, client_logits, weight=batch.get("mask")), logits
 
             (_, logits), g = jax.value_and_grad(loss_fn, has_aux=True)(sp)
             sp, so = opt.update(sp, g, so)

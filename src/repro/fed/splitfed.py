@@ -19,6 +19,10 @@ SPLIT_TIER = 1  # 0-based: client keeps md1..md2, the paper's SplitFed split
 
 class SplitFedTrainer(BaseTrainer):
     name = "splitfed"
+    # the per-batch z-up/grad-down gradient round trip is NOT the codec
+    # plane's download/update-upload contract; compressing grad_z would
+    # change the backprop math, so non-identity codecs are rejected
+    supports_codec = False
 
     def client_time(self, k: int) -> float:
         return self._splitfed_time(k, self.clients[k].n_batches)

@@ -55,9 +55,6 @@ def dcor_kernelized(x: jax.Array, z: jax.Array, *, interpret: bool = True) -> ja
         return d - d.mean(0, keepdims=True) - d.mean(1, keepdims=True) + d.mean()
 
     a, b = center(a), center(b)
-    dcov2 = jnp.mean(a * b)
-    return jnp.sqrt(
-        jnp.maximum(dcov2, 0.0)
-        / jnp.sqrt(jnp.mean(a * a) * jnp.mean(b * b) + 1e-12)
-        + 1e-12
-    )
+    from repro.privacy import _safe_dcor_ratio
+
+    return _safe_dcor_ratio(jnp.mean(a * b), jnp.mean(a * a) * jnp.mean(b * b))

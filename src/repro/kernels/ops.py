@@ -15,6 +15,7 @@ from repro.kernels.dcor import dcor_kernelized, pairwise_dist
 from repro.kernels.fused_xent import fused_xent
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.mlstm_chunk import mlstm_chunk
+from repro.kernels.quantize import int8_roundtrip
 
 ON_TPU = jax.default_backend() == "tpu"
 
@@ -52,6 +53,13 @@ def pairwise_dist_op(x):
 @jax.jit
 def dcor_op(x, z):
     return dcor_kernelized(x, z, interpret=not ON_TPU)
+
+
+@jax.jit
+def int8_roundtrip_op(x):
+    """Fused per-tensor-scale int8 quantize/dequantize — the communication
+    plane's int8 wire transform (kernels/quantize.py)."""
+    return int8_roundtrip(x, interpret=not ON_TPU)
 
 
 @jax.jit

@@ -1,0 +1,55 @@
+"""Fused int8 per-tensor-scale quantize/dequantize Pallas kernel — the
+communication plane's wire transform (core/codec.py: Int8Codec).
+
+A real deployment quantizes on the sender and dequantizes on the receiver;
+in simulation both ends live in one device program, so the kernel fuses the
+pair into a single tiled pass (no int8 intermediate is ever materialized in
+HBM — the round-trip is one read + one write per element). The per-tensor
+scale ``s = max|x| / 127`` is a cheap O(n) jnp reduction outside the grid,
+exactly like dcor's centering (kernels/dcor.py) stays in jnp.
+
+Grid = (n/block,); each program quantizes one flat block:
+``out = clip(round(x / s), -127, 127) * s``.
+
+The pure-jnp oracle is ``kernels/ref.py: int8_roundtrip_ref`` (same op
+order, so CPU interpret mode is bit-equal); ``kernels/ops.py:
+int8_roundtrip_op`` is the jitted dispatch wrapper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _qdq_kernel(x_ref, s_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    s = s_ref[0, 0]
+    q = jnp.clip(jnp.round(x / s), -127.0, 127.0)
+    o_ref[...] = q * s
+
+
+def int8_roundtrip(x: jax.Array, *, block: int = 4096, interpret: bool = True) -> jax.Array:
+    """Quantize ``x`` to int8 with one per-tensor scale and dequantize back;
+    any shape/float dtype, output dtype preserved."""
+    shape, dtype = x.shape, x.dtype
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.size
+    scale = (jnp.maximum(jnp.max(jnp.abs(flat)), 1e-12) / 127.0).reshape(1, 1)
+    bb = min(block, n)
+    pad = (-n) % bb
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+    rows = flat.size // bb
+    out = pl.pallas_call(
+        _qdq_kernel,
+        grid=(rows,),
+        in_specs=[
+            pl.BlockSpec((1, bb), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bb), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, bb), jnp.float32),
+        interpret=interpret,
+    )(flat.reshape(rows, bb), scale)
+    return out.reshape(-1)[:n].reshape(shape).astype(dtype)

@@ -60,6 +60,15 @@ def pairwise_dist_ref(x):
     return jnp.sqrt(jnp.maximum(d2, 1e-12))
 
 
+def int8_roundtrip_ref(x):
+    """Per-tensor-scale int8 quantize/dequantize (kernels/quantize.py oracle;
+    also the jnp body of core/codec.py: Int8Codec — same op order)."""
+    xf = x.astype(jnp.float32)
+    s = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / s), -127.0, 127.0)
+    return (q * s).astype(x.dtype)
+
+
 def fused_xent_ref(logits, labels):
     """Per-token cross entropy, fp32 stats. logits (T, V); labels (T,)."""
     import jax.numpy as jnp

@@ -101,6 +101,14 @@ def main(argv=None):
                          "devices). On CPU, forces "
                          "--xla_force_host_platform_device_count so N-way "
                          "sharding works on any host")
+    ap.add_argument("--codec", default="identity",
+                    help="communication codec for the three wires (activation "
+                         "uplink z, client-model download, client-update "
+                         "upload): identity | bf16 | int8 | topk<frac> (e.g. "
+                         "topk0.05, with client-held error feedback). "
+                         "identity is bit-for-bit the uncompressed path; "
+                         "compressed codecs change the simulated comm times "
+                         "AND what the tier scheduler re-tiers on")
     ap.add_argument("--n-groups", type=int, default=3,
                     help="speed groups for --engine async")
     ap.add_argument("--churn", action="store_true",
@@ -154,6 +162,7 @@ def main(argv=None):
     trainer_cls = TRAINERS[args.method]
     kw = {"scheduler": args.scheduler} if args.method == "dtfl" else {}
     kw["exec_plan"] = ExecPlan.from_flags(args.exec_mode, devices=args.devices)
+    kw["codec"] = args.codec
     trainer = trainer_cls(adapter, clients, env, optim.adam(args.lr), seed=args.seed, **kw)
 
     # engine defaults per method (fedat is async by construction); an

@@ -35,7 +35,19 @@ def dcor(x: jax.Array, z: jax.Array) -> jax.Array:
     dcov2 = jnp.mean(a * b)
     dvar_x = jnp.mean(a * a)
     dvar_z = jnp.mean(b * b)
-    return jnp.sqrt(jnp.maximum(dcov2, 0.0) / jnp.sqrt(dvar_x * dvar_z + 1e-12) + 1e-12)
+    return _safe_dcor_ratio(dcov2, dvar_x * dvar_z)
+
+
+def _safe_dcor_ratio(dcov2: jax.Array, dvar_prod: jax.Array) -> jax.Array:
+    """sqrt(dcov2 / sqrt(dvar_x * dvar_z)) with guards OUTSIDE the result:
+    independent (dcov2 <= 0) or zero-variance inputs return exactly 0, and
+    gradients stay finite (the old ``sqrt(ratio + 1e-12)`` floored every
+    result at ~1e-6, biasing e.g. the Table-5 alpha sweep at dcor ~ 0)."""
+    den = jnp.sqrt(jnp.maximum(dvar_prod, 0.0))
+    ratio = jnp.where(den > 0.0, jnp.maximum(dcov2, 0.0) / jnp.maximum(den, 1e-30), 0.0)
+    safe = ratio > 0.0
+    # double-where keeps sqrt's gradient off the ratio<=0 branch (no NaNs)
+    return jnp.where(safe, jnp.sqrt(jnp.where(safe, ratio, 1.0)), 0.0)
 
 
 def patch_shuffle(key, z: jax.Array, n_patches: int = 16) -> jax.Array:

@@ -1,0 +1,298 @@
+"""Communication plane: codec round-trips, wire accounting, identity
+bit-exactness, cross-plane equivalence, and error-feedback resume.
+
+Key contracts pinned here:
+  * ``--codec identity`` IS the uncompressed path — bit-for-bit identical
+    params, scheduler observations, and round clocks on DTFL + FedAvg,
+    across exec planes and engines;
+  * lossy codecs agree between the loop and cohort planes to quantization-
+    step tolerance (quantization is discontinuous: a 1-ulp vmap reduction
+    difference may flip a bucket, so exact equality is not the contract);
+  * top-k's client-held error-feedback residuals ride the checkpoint
+    envelope and resume bit-deterministically;
+  * codec-true wire bytes flow into the scheduler profile, the simulated
+    clocks, and RoundLog.uplink_bytes.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro import optim
+from repro.configs.resnet_cifar import RESNET56
+from repro.core import timemodel
+from repro.core.codec import (Bf16Codec, IdentityCodec, Int8Codec, TopKCodec,
+                              make_codec, wire_sizes)
+from repro.data.pipeline import ClientDataset, make_eval_batch
+from repro.data.synthetic import ClassImageTask
+from repro.fed import (DTFLTrainer, FedAvgTrainer, HeteroEnv, ResNetAdapter,
+                       SimClient, TRAINERS)
+
+jnp = jax.numpy
+
+
+# ---------------------------------------------------------------------------
+# codec unit behavior
+# ---------------------------------------------------------------------------
+
+def test_make_codec_specs():
+    assert make_codec(None).is_identity
+    assert make_codec("identity").is_identity
+    assert isinstance(make_codec("bf16"), Bf16Codec)
+    assert isinstance(make_codec("int8"), Int8Codec)
+    tk = make_codec("topk0.05")
+    assert isinstance(tk, TopKCodec) and tk.frac == 0.05
+    with pytest.raises(ValueError):
+        make_codec("gzip")
+    with pytest.raises(ValueError):
+        make_codec("topk1.5")
+
+
+def test_identity_tree_rt_is_structural_noop():
+    tree = {"a": jnp.ones((3, 4)), "b": (jnp.zeros(2),)}
+    assert IdentityCodec().tree_rt(tree) is tree
+
+
+def test_bf16_roundtrip_error_bound(key):
+    x = jax.random.normal(key, (64, 32))
+    y = Bf16Codec().rt(x)
+    # bf16 has 8 mantissa bits -> relative error <= 2^-8
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=2 ** -8, atol=0)
+
+
+def test_int8_roundtrip_error_bound(key):
+    x = jax.random.normal(key, (128, 16))
+    y = Int8Codec().rt(x)
+    scale = float(jnp.max(jnp.abs(x))) / 127.0
+    assert float(jnp.max(jnp.abs(y - x))) <= 0.5 * scale + 1e-7
+
+
+def test_topk_keeps_exactly_k(key):
+    x = jax.random.normal(key, (40, 10))
+    y = TopKCodec(0.1).rt(x)
+    kept = np.flatnonzero(np.asarray(y).ravel())
+    assert len(kept) == 40  # ceil(0.1 * 400)
+    xa = np.abs(np.asarray(x).ravel())
+    assert xa[kept].min() >= np.sort(xa)[-40] - 1e-12
+    np.testing.assert_array_equal(np.asarray(y).ravel()[kept],
+                                  np.asarray(x).ravel()[kept])
+
+
+def test_topk_error_feedback_transmits_everything_eventually(key):
+    """With EF, repeatedly uploading the SAME tensor drains the residual:
+    the un-sent mass re-enters until every coordinate has been sent."""
+    codec = TopKCodec(0.25)
+    x = jax.random.normal(key, (16,))
+    e = jnp.zeros_like(x)
+    received = jnp.zeros_like(x)
+    for _ in range(8):
+        y, e = codec.rt_ef(x, e)
+        received = received + y
+    # total received + residual == total uploaded (conservation)
+    np.testing.assert_allclose(np.asarray(received + e), np.asarray(8 * x),
+                               atol=1e-5)
+    # the residual stays bounded (coords queue, they don't leak): a coord
+    # can transiently exceed max|x| while waiting to enter the top-k, but
+    # never grows unboundedly with the number of rounds
+    assert float(jnp.max(jnp.abs(e))) <= 8.0 * float(jnp.max(jnp.abs(x)))
+    assert np.isfinite(np.asarray(e)).all()
+
+
+def test_int_leaves_pass_through():
+    x = jnp.arange(10, dtype=jnp.int32)
+    for c in (Bf16Codec(), Int8Codec(), TopKCodec(0.5)):
+        assert c.rt(x) is x
+
+
+def test_nbytes_accounting():
+    n = np.array([1000.0, 10.0])
+    np.testing.assert_array_equal(IdentityCodec().nbytes(n), [4000.0, 40.0])
+    np.testing.assert_array_equal(Bf16Codec().nbytes(n), [2000.0, 20.0])
+    np.testing.assert_array_equal(Int8Codec().nbytes(n), [1004.0, 14.0])
+    np.testing.assert_array_equal(TopKCodec(0.05).nbytes(n), [400.0, 8.0])
+    # top-k's DOWNLOAD wire is dense (identity transform, fp32 pricing)
+    np.testing.assert_array_equal(TopKCodec(0.05).down_nbytes(n), [4000.0, 40.0])
+    x = jnp.arange(8.0)
+    assert TopKCodec(0.05).down_rt(x) is x
+    assert (np.asarray(Int8Codec().down_rt(x))
+            == np.asarray(Int8Codec().rt(x))).all()
+
+
+def test_wire_sizes_identity_matches_legacy_accounting():
+    costs = timemodel.resnet_tier_costs(RESNET56, 32)
+    w = wire_sizes(costs)  # identity
+    np.testing.assert_array_equal(w.z_bytes, costs.z_bytes)
+    np.testing.assert_array_equal(w.down_bytes, costs.client_param_bytes)
+    np.testing.assert_array_equal(w.up_bytes, np.zeros_like(w.up_bytes))
+    assert w.full_down == w.full_up == costs.full_param_bytes
+    # compressed codecs price all three wires from element counts
+    w8 = wire_sizes(costs, "int8")
+    assert (w8.z_bytes < w.z_bytes).all()
+    assert (w8.up_bytes > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# trainer-level contracts
+# ---------------------------------------------------------------------------
+
+def _build(sizes=(64, 64, 48), batch=16, seed=0):
+    cfg = RESNET56.reduced()
+    task = ClassImageTask(n_classes=10, image_size=cfg.image_size)
+    labels = np.random.default_rng(0).integers(0, 10, sum(sizes))
+    clients, off = [], 0
+    for i, s in enumerate(sizes):
+        clients.append(
+            SimClient(i, ClientDataset(task, labels, np.arange(off, off + s), batch), None))
+        off += s
+    return ResNetAdapter(cfg, cost_cfg=RESNET56), clients, task
+
+
+def _dtfl(adapter, clients, codec=None, exec_plan=None, seed=0):
+    return DTFLTrainer(adapter, clients, HeteroEnv(len(clients), seed=seed),
+                       optim.adam(1e-3), seed=seed, codec=codec,
+                       exec_plan=exec_plan)
+
+
+def _assert_trees(a, b, *, exact=False, atol=5e-3, rtol=5e-3):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        if exact:
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        else:
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       atol=atol, rtol=rtol)
+
+
+@pytest.mark.parametrize("cls", [DTFLTrainer, FedAvgTrainer])
+def test_identity_codec_bit_equals_default(cls):
+    """--codec identity must be bit-for-bit the pre-codec path: params,
+    clocks, assignments, scheduler observations."""
+    adapter, clients, _ = _build()
+    kw = {} if cls is DTFLTrainer else {}
+    a = cls(adapter, clients, HeteroEnv(3, seed=0), optim.adam(1e-3), seed=0, **kw)
+    b = cls(adapter, clients, HeteroEnv(3, seed=0), optim.adam(1e-3), seed=0,
+            codec="identity", **kw)
+    parts = [0, 1, 2]
+    for r in range(2):
+        ra, rb = a.train_round(r, parts), b.train_round(r, parts)
+        if isinstance(ra, tuple):
+            assert ra[0] == rb[0] and ra[1] == rb[1]
+        else:
+            assert ra == rb
+    _assert_trees(a.params, b.params, exact=True)
+    assert a.last_uplink_bytes == b.last_uplink_bytes
+    if cls is DTFLTrainer:
+        for c1, c2 in zip(a.sched.clients, b.sched.clients):
+            assert c1.tier == c2.tier and set(c1.ema) == set(c2.ema)
+            for m in c1.ema:
+                assert c1.ema[m].value == c2.ema[m].value
+
+
+def test_identity_codec_events_engine_bit_equal():
+    adapter, clients, task = _build()
+    ev = make_eval_batch(task, 64)
+    a = _dtfl(*_build()[:2])
+    b = _dtfl(*_build()[:2], codec="identity")
+    la = a.run(2, ev, engine="events")
+    lb = b.run(2, ev, engine="events")
+    assert [l.clock for l in la] == [l.clock for l in lb]
+    assert [l.uplink_bytes for l in la] == [l.uplink_bytes for l in lb]
+    _assert_trees(a.params, b.params, exact=True)
+
+
+@pytest.mark.parametrize("codec", ["int8", "topk0.1"])
+def test_codec_loop_equals_cohort_to_quant_tolerance(codec):
+    adapter, clients, _ = _build()
+    lo = _dtfl(adapter, clients, codec=codec, exec_plan="loop")
+    co = _dtfl(adapter, clients, codec=codec, exec_plan="cohort")
+    parts = [0, 1, 2]
+    for r in range(2):
+        _, a1 = lo.train_round(r, parts)
+        _, a2 = co.train_round(r, parts)
+        assert a1 == a2
+    _assert_trees(lo.params, co.params)
+    # scheduler observations identical (time model is plane-independent)
+    for c1, c2 in zip(lo.sched.clients, co.sched.clients):
+        assert c1.tier == c2.tier
+        for m in c1.ema:
+            assert c1.ema[m].value == pytest.approx(c2.ema[m].value, rel=1e-12)
+
+
+def test_codec_changes_comm_times_and_uplink_bytes():
+    """int8 must shrink both the simulated comm times (the scheduler's
+    straggler clock) and the reported uplink bytes vs identity."""
+    adapter, clients, _ = _build()
+    ident = _dtfl(adapter, clients)
+    quant = _dtfl(adapter, clients, codec="int8")
+    s_i, _ = ident.train_round(0, [0, 1, 2])
+    s_q, _ = quant.train_round(0, [0, 1, 2])
+    assert quant.last_uplink_bytes < 0.5 * ident.last_uplink_bytes
+    assert s_q < s_i  # comm share of Eq. 5 shrinks
+
+
+def test_uplink_bytes_logged_per_round():
+    adapter, clients, task = _build()
+    ev = make_eval_batch(task, 64)
+    tr = _dtfl(adapter, clients, codec="int8")
+    logs = tr.run(2, ev, engine="rounds")
+    assert all(l.uplink_bytes > 0 for l in logs)
+    assert logs[0].uplink_bytes == pytest.approx(tr.last_uplink_bytes)
+
+
+def test_topk_ef_state_resumes_bit_deterministically(tmp_path):
+    """Error-feedback residuals ride the checkpoint envelope: straight run
+    == save@2 -> fresh process -> resume -> continue, bit for bit."""
+    p = os.path.join(str(tmp_path), "state.npz")
+    adapter, clients, task = _build()
+    ev = make_eval_batch(task, 64)
+
+    straight = _dtfl(*_build()[:2], codec="topk0.1")
+    straight.run(4, ev, engine="rounds")
+
+    first = _dtfl(*_build()[:2], codec="topk0.1")
+    first.run(2, ev, engine="rounds", checkpoint_path=p, checkpoint_every=2)
+    resumed = _dtfl(*_build()[:2], codec="topk0.1")
+    logs = resumed.run(4, ev, engine="rounds", resume=ckpt.load(p))
+
+    assert [l.round for l in logs] == [2, 3]
+    _assert_trees(straight.params, resumed.params, exact=True)
+    assert sorted(straight._ef) == sorted(resumed._ef)
+    for cid in straight._ef:
+        assert straight._ef[cid]["tier"] == resumed._ef[cid]["tier"]
+        _assert_trees(straight._ef[cid]["c"], resumed._ef[cid]["c"], exact=True)
+        _assert_trees(straight._ef[cid]["a"], resumed._ef[cid]["a"], exact=True)
+
+
+def test_topk_does_not_sparsify_the_global_model():
+    """Regression: sparsifying the DOWNLOAD wire zeroed ~(1-frac) of the
+    aggregated global every round (client-held EF can't compensate a
+    truncated broadcast). With a dense download, the global stays dense."""
+    adapter, clients, _ = _build()
+    tr = FedAvgTrainer(adapter, clients, HeteroEnv(3, seed=0), optim.adam(1e-3),
+                       seed=0, codec="topk0.05")
+    tr.train_round(0, [0, 1, 2])
+    flat = np.concatenate([np.asarray(x).ravel() for x in jax.tree.leaves(tr.params)])
+    assert np.mean(flat == 0.0) < 0.1, f"global went sparse: {np.mean(flat == 0.0):.2%}"
+
+
+@pytest.mark.parametrize("method", ["splitfed", "fedgkt"])
+def test_codec_unsupported_trainers_reject(method):
+    adapter, clients, _ = _build()
+    with pytest.raises(ValueError, match="codec"):
+        TRAINERS[method](adapter, clients, HeteroEnv(3, seed=0),
+                         optim.adam(1e-3), seed=0, codec="int8")
+
+
+def test_fedavg_int8_runs_and_shrinks_wires():
+    adapter, clients, _ = _build()
+    f_i = FedAvgTrainer(adapter, clients, HeteroEnv(3, seed=0), optim.adam(1e-3), seed=0)
+    f_q = FedAvgTrainer(adapter, clients, HeteroEnv(3, seed=0), optim.adam(1e-3),
+                        seed=0, codec="int8")
+    s_i = f_i.train_round(0, [0, 1, 2])
+    s_q = f_q.train_round(0, [0, 1, 2])
+    assert f_q.last_uplink_bytes < 0.5 * f_i.last_uplink_bytes
+    assert s_q < s_i
+    _assert_trees(f_i.params, f_q.params, atol=0.05, rtol=0.1)  # same ballpark

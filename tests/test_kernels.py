@@ -107,6 +107,45 @@ def test_flash_attention_inference_batch(key):
     )
 
 
+@pytest.mark.parametrize("shape", [(64,), (77, 130), (4, 8, 33)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_int8_quantize_kernel_matches_ref(shape, dtype, key):
+    from repro.kernels.quantize import int8_roundtrip
+
+    x = mk(key, shape, dtype)
+    out = int8_roundtrip(x, interpret=True)
+    want = ref.int8_roundtrip_ref(x)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+@pytest.mark.parametrize("block", [64, 1000, 4096])
+def test_int8_quantize_kernel_block_shapes(block, key):
+    from repro.kernels.quantize import int8_roundtrip
+
+    x = mk(key, (501,), jnp.float32)  # deliberately not a block multiple
+    np.testing.assert_array_equal(
+        np.asarray(int8_roundtrip(x, block=block, interpret=True)),
+        np.asarray(ref.int8_roundtrip_ref(x)))
+
+
+def test_int8_op_matches_codec_jnp_body(key):
+    from repro.core.codec import Int8Codec
+
+    x = mk(key, (96, 64), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(ops.int8_roundtrip_op(x)),
+        np.asarray(Int8Codec().rt(x)))
+
+
+def test_int8_all_zero_input_is_stable():
+    from repro.kernels.quantize import int8_roundtrip
+
+    x = jnp.zeros((130,))
+    out = int8_roundtrip(x, interpret=True)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
 @pytest.mark.parametrize("T,V,bv", [(128, 1000, 256), (256, 2048, 2048), (64, 777, 128)])
 def test_fused_xent_sweep(T, V, bv, key):
     from repro.kernels.fused_xent import fused_xent

@@ -106,6 +106,44 @@ def test_dynamic_adapts_to_profile_change():
     assert after <= before  # more offloading for the now-slow client
 
 
+def test_comm_cost_matches_ground_truth_for_any_task_size():
+    """Regression (comm-model unit bug): the profile used to bake a
+    reference n_batches into one per-batch d_size, overcounting the
+    parameter download by nb/nb_ref for clients whose task size differs.
+    With z/param bytes stored separately, the scheduler's comm term and
+    estimate equal ``timemodel.simulate_client_times`` ground truth for
+    EVERY batch count."""
+    from repro.configs.resnet_cifar import RESNET110
+
+    costs = timemodel.resnet_tier_costs(RESNET110, 32)
+    prof = TierProfile.from_cost_table(
+        costs, ref_flops=timemodel.UNIT_FLOPS,
+        server_flops=timemodel.SERVER_FLOPS)
+    rp = timemodel.PAPER_PROFILES[2]   # 1 CPU / 30 Mbps
+    s = DynamicTierScheduler(prof, n_clients=1)
+    for tier in (0, 3, 6):
+        for nb in (1, 4, 10, 37):      # the paper's "varying task sizes"
+            t = timemodel.simulate_client_times(costs, tier, rp, nb)
+            s.observe(0, tier=tier, total_client_time=t["client"] + t["comm"],
+                      nu=rp.bytes_per_s, n_batches=nb)
+            # line 22 must recover the pure compute time exactly...
+            assert s.clients[0].ema[tier].value == pytest.approx(
+                t["client"], rel=1e-9)
+            # ...so the Eq.-5 estimate for the observed tier equals ground
+            # truth (server term matches at n_sharing=1)
+            est = s.estimate(0)
+            assert est[tier] == pytest.approx(t["total"], rel=1e-6)
+            s.clients[0].ema.clear()   # independent observations
+
+
+def test_legacy_d_size_profile_still_composes_per_batch():
+    prof = TierProfile(t_client_ref=np.arange(1.0, 4.0),
+                       t_server_ref=np.zeros(3), d_size=np.full(3, 100.0))
+    np.testing.assert_array_equal(prof.z_bytes, np.full(3, 100.0))
+    np.testing.assert_array_equal(prof.param_bytes, np.zeros(3))
+    assert prof.comm_bytes(1, 7) == 700.0
+
+
 def test_static_scheduler():
     s = StaticScheduler(tier=2, n_clients=4)
     assert s.schedule() == {0: 2, 1: 2, 2: 2, 3: 2}
