@@ -1,73 +1,28 @@
-"""Shared benchmark scaffolding.
+"""Shared benchmark scaffolding, rebuilt on the declarative experiment API.
 
-Gradient dynamics run on REDUCED models (CPU container); all reported times
-come from the analytic time model priced on the FULL ResNet-56/110 (or full
-transformer) cost tables — the paper's own experiments simulate resource
-profiles the same way (DESIGN.md §2/§8).
+Every benchmark module expresses its protocol as named ``repro.presets``
+specs and runs them through :func:`run_spec` — the same
+``ExperimentSpec.build().run()`` path as ``launch/train.py`` — so the
+benchmarks cannot drift from the CLI wiring. Gradient dynamics run on
+REDUCED models (CPU container); all reported times come from the analytic
+time model priced on the FULL ResNet-56/110 (or full transformer) cost
+tables via each spec's ``model.cost_model`` — the paper's own experiments
+simulate resource profiles the same way.
 
 Output convention: every benchmark module's ``main(emit_fn)`` prints CSV
 rows ``<table>,<keys...>,<values...>`` (one schema per module, documented in
 its docstring) so ``benchmarks/run.py`` output is machine-parseable as-is.
-``run_method`` routes DTFL and the full-model baselines through the cohort
-engine by default (``exec_plan="loop"`` selects the sequential debug path,
-``ExecPlan.sharded(...)`` the mesh-sharded plane); FedGKT always runs its
-sequential two-phase KD protocol.
 """
 from __future__ import annotations
 
-import time
-
-import numpy as np
-
-from repro import optim
-from repro.configs.resnet_cifar import RESNET56, RESNET110, get_resnet
-from repro.data.partition import dirichlet_partition, iid_partition
-from repro.data.pipeline import ClientDataset, make_eval_batch
-from repro.data.synthetic import ClassImageTask
-from repro.fed import HeteroEnv, ResNetAdapter, SimClient, TRAINERS
+from repro.api import ExperimentSpec, Federation
 
 
-def image_setup(n_clients=10, samples=2000, batch=32, iid=True, n_classes=10, seed=0):
-    cfg = RESNET56.reduced()
-    task = ClassImageTask(n_classes=n_classes, image_size=cfg.image_size)
-    labels = np.random.default_rng(seed).integers(0, n_classes, samples)
-    part = iid_partition(labels, n_clients, seed) if iid else dirichlet_partition(
-        labels, n_clients, 0.5, seed)
-    clients = [SimClient(i, ClientDataset(task, labels, part[i], batch), None)
-               for i in range(n_clients)]
-    return cfg, clients, make_eval_batch(task, 512)
-
-
-def run_method(method, cfg, clients, ev, *, cost_model="resnet-110", rounds=8,
-               target=None, scheduler="dynamic", participation=1.0, seed=0,
-               switch_every=50, dcor_alpha=0.0, lr=1e-3, exec_plan=None,
-               engine="rounds", churn=None, n_groups=3, codec=None,
-               profiles=None):
-    """``engine``: "rounds" (legacy scalar clock), "events" (discrete-event
-    sync; supports ``churn``), or "async" (FedAT-style per-tier pacing).
-    ``fedat`` always runs async regardless of ``engine``. ``exec_plan``:
-    None/"cohort" | "loop" | ExecPlan.sharded(mesh) — the execution plane.
-    ``codec``: communication codec spec (identity | bf16 | int8 | topk<f>).
-    ``profiles``: resource-profile pool override for the HeteroEnv."""
-    cost_cfg = get_resnet(cost_model)
-    adapter = ResNetAdapter(cfg, cost_cfg=cost_cfg, dcor_alpha=dcor_alpha)
-    env = HeteroEnv(len(clients), profiles=profiles,
-                    switch_every=switch_every, seed=seed)
-    kw = {"scheduler": scheduler} if method == "dtfl" else {}
-    kw["exec_plan"] = exec_plan
-    kw["codec"] = codec
-    if method == "fedat":
-        kw["n_groups"] = n_groups
-    tr = TRAINERS[method](adapter, clients, env, optim.adam(lr), seed=seed, **kw)
-    run_kw = {"churn": churn}
-    if method != "fedat":  # FedAT is async by construction
-        run_kw["engine"] = engine
-    if engine == "async" and method != "fedat":
-        run_kw["n_groups"] = n_groups
-    logs = tr.run(rounds, ev, target_acc=target, participation=participation, **run_kw)
-    return logs
-
-
-def emit(rows: list[tuple]):
-    for r in rows:
-        print(",".join(str(x) for x in r))
+def run_spec(spec: ExperimentSpec, *, reuse: Federation | None = None,
+             verbose: bool = False):
+    """Build + run one spec; returns ``(logs, federation)``. Pass the
+    previous point's federation as ``reuse`` to share its compiled cohort
+    programs when the specs' ``program_key()`` match (benchmarks/sweep.py's
+    recompilation lever)."""
+    fed = Federation(spec, reuse=reuse)
+    return fed.run(verbose=verbose), fed

@@ -5,7 +5,10 @@ heterogeneity WITH client churn (mid-round dropouts + profile switches),
 synchronous DTFL pays every round for the slowest participant's best-tier
 time, while async tiers (FedAT-style per-group pacing + staleness-weighted
 merges, ``fed/engine.py: run_async``) let fast groups keep updating the
-global model while slow groups are still in flight. The figure data is the
+global model while slow groups are still in flight. Each mode is the
+``presets.fig_async`` scenario (same seeded churn stream and rates per mode;
+the REALIZED dropout/switch sequence still differs per mode because sync
+draws per round while async draws per group wave). The figure data is the
 full (virtual clock, accuracy) timeline of each mode plus the
 time-to-target summary.
 
@@ -21,8 +24,8 @@ CSV rows:
 """
 from __future__ import annotations
 
-from benchmarks.common import image_setup, run_method
-from repro.fed import ChurnModel
+from repro import presets
+from benchmarks.common import run_spec
 
 
 def _time_to_target(logs, target):
@@ -35,25 +38,11 @@ def _time_to_target(logs, target):
 def main(emit_fn=print, rounds=12, target=0.55, n_clients=10, n_groups=3,
          churn=True, seed=0):
     out = []
-    cfg, clients, ev = image_setup(n_clients=n_clients, iid=True, seed=seed)
-
-    def mk_churn():
-        # fresh model per mode: same seeded stream and rates, but the
-        # REALIZED dropout/switch sequence still differs per mode because
-        # sync draws per round while async draws per group wave
-        return ChurnModel(n_clients, drop_prob=0.1, switch_prob=0.1,
-                          start_offline_frac=0.2, seed=seed + 1) if churn else None
-
-    runs = {
-        "sync_dtfl": dict(engine="events"),
-        "async_dtfl": dict(engine="async", n_groups=n_groups),
-        "fedat": dict(n_groups=n_groups),
-    }
     summary = {}
-    for mode, kw in runs.items():
-        method = "fedat" if mode == "fedat" else "dtfl"
-        logs = run_method(method, cfg, clients, ev, rounds=rounds, target=target,
-                          cost_model="resnet-110", churn=mk_churn(), seed=seed, **kw)
+    for mode in ("sync_dtfl", "async_dtfl", "fedat"):
+        logs, _ = run_spec(presets.fig_async(
+            mode, rounds=rounds, target=target, clients=n_clients,
+            n_groups=n_groups, churn=churn, seed=seed))
         for l in logs:
             out.append(("fig_async_timeline", mode, l.round,
                         round(l.clock), round(l.acc, 3)))

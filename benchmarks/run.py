@@ -18,6 +18,7 @@ SUITES = [
     "fig_async_timeline",
     "table5_privacy",
     "table6_comm",
+    "sweep",
     "roofline",
 ]
 

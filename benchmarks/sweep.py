@@ -1,0 +1,129 @@
+"""Spec-grid sweep plane: expand an ExperimentSpec grid, run every point,
+emit one tidy CSV.
+
+A sweep is ``base preset x cartesian grid of dotted-path overrides``::
+
+  PYTHONPATH=src:. python benchmarks/sweep.py \
+      --preset quickstart --rounds 2 \
+      --grid "trainer.method=dtfl,fedavg data.clients=3,4" --out sweep.csv
+
+Each grid point is ``base.with_overrides({...})`` — so every point is
+re-validated by the spec layer, and an illegal combination fails BEFORE any
+point runs. Points are executed grouped by ``spec.program_key()`` and each
+``Federation`` is built with ``reuse=<previous point>``: grid points that
+share (arch, batch shape, tier count, lr, codec, exec plane) transplant the
+previous point's compiled per-tier cohort programs and jitted eval instead
+of recompiling them. On this 2-CPU box recompilation dominates small
+sweeps, so program reuse is the speed win — the ``programs_reused`` CSV
+column records where it applied.
+
+CSV schema (one header row, then one row per grid point, in run order):
+  preset,point,<grid key 1>,...,<grid key K>,rounds_run,final_acc,
+      sim_clock_s,wall_s,programs_reused
+
+``--spec file.json`` sweeps around an explicit spec (e.g. one written by
+``repro.launch.train --out-spec``) instead of a named preset.
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+import time
+
+from repro import presets
+from repro.api import ExperimentSpec, Federation, SpecError
+
+
+def parse_grid(grid: str) -> list[tuple[str, list[str]]]:
+    """``"a.b=1,2 c.d=x,y"`` (space/semicolon separated) -> ordered axes."""
+    axes = []
+    for part in grid.replace(";", " ").split():
+        if "=" not in part:
+            raise SpecError(f"bad grid axis {part!r}; expected path=v1,v2,...")
+        path, _, vals = part.partition("=")
+        values = [v for v in vals.split(",") if v != ""]
+        if not values:
+            raise SpecError(f"grid axis {path!r} has no values")
+        axes.append((path, values))
+    return axes
+
+
+def expand(base: ExperimentSpec, axes: list[tuple[str, list[str]]]
+           ) -> list[tuple[dict, ExperimentSpec]]:
+    """Cartesian product of the grid axes over ``base`` — every point is a
+    fully validated spec (illegal combos fail here, before anything runs)."""
+    points = []
+    for combo in itertools.product(*(vals for _, vals in axes)):
+        overrides = {path: v for (path, _), v in zip(axes, combo)}
+        points.append((overrides, base.with_overrides(overrides)))
+    return points
+
+
+def main(emit_fn=print, *, preset: str = "quickstart",
+         grid: str = "trainer.method=dtfl,fedavg data.clients=3,4",
+         rounds: int | None = 2, base: ExperimentSpec | None = None,
+         verbose: bool = False):
+    if base is None:
+        if preset not in presets.PRESETS:
+            raise SpecError(f"unknown preset {preset!r}; registered presets: "
+                            + ", ".join(sorted(presets.PRESETS)))
+        base = presets.PRESETS[preset]()
+    if rounds is not None:
+        base = base.with_overrides({"rounds": rounds, "target_acc": None})
+    axes = parse_grid(grid)
+    points = expand(base, axes)
+    # run grouped by program key so consecutive points can transplant the
+    # previous Federation's compiled programs (the CSV stays in run order;
+    # ``point`` is the grid index)
+    order = sorted(range(len(points)),
+                   key=lambda i: (repr(points[i][1].program_key()), i))
+
+    rows = [("preset", "point", *(path for path, _ in axes), "rounds_run",
+             "final_acc", "sim_clock_s", "wall_s", "programs_reused")]
+    prev = None
+    for i in order:
+        overrides, spec = points[i]
+        t0 = time.perf_counter()
+        fed = Federation(spec, reuse=prev)
+        logs = fed.run(verbose=verbose)
+        wall = time.perf_counter() - t0
+        rows.append((preset, i, *(overrides[p] for p, _ in axes), len(logs),
+                     round(logs[-1].acc, 4), round(logs[-1].clock, 1),
+                     round(wall, 2), fed.programs_reused))
+        prev = fed
+    for r in rows:
+        emit_fn(",".join(str(x) for x in r))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="quickstart",
+                    help="base scenario: " + ", ".join(sorted(presets.PRESETS)))
+    ap.add_argument("--spec", default=None,
+                    help="sweep around an explicit spec JSON file instead of "
+                         "a preset (e.g. from train.py --out-spec)")
+    ap.add_argument("--grid", default="trainer.method=dtfl,fedavg data.clients=3,4",
+                    help='space/;-separated axes: "path=v1,v2 path2=v3,v4"')
+    ap.add_argument("--rounds", type=int, default=None,
+                    help="override every point's round budget (clears "
+                         "target_acc); default: the base spec's")
+    ap.add_argument("--out", default=None, help="also write the CSV here")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args()
+    base = None
+    if args.spec:
+        with open(args.spec) as f:
+            base = ExperimentSpec.from_json(f.read())
+    lines = []
+
+    def tee(s):
+        print(s)
+        lines.append(s)
+
+    # with --spec, "preset" is only the CSV label column — name the file
+    main(tee, preset=args.spec if args.spec else args.preset, grid=args.grid,
+         rounds=args.rounds, base=base, verbose=args.verbose)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write("\n".join(lines) + "\n")

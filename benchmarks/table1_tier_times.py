@@ -4,8 +4,8 @@ Faithful protocol: the table's entries are TIME-TO-TARGET, so each static
 tier pays (rounds-to-target at that tier) x (per-round straggler time under
 the case's resource profiles). Rounds-to-target come from REAL training of a
 width-reduced ResNet with a StaticScheduler per tier (low tiers converge
-slower: tiny client models + local loss); per-round times are priced on the
-full ResNet-110 cost table.
+slower: tiny client models + local loss) — the ``presets.table1_static``
+scenario; per-round times are priced on the full ResNet-110 cost table.
 
 Claims reproduced: (a) time varies non-trivially across tiers and the best
 static tier depends on the resource case; (b) FedAvg is no better than the
@@ -17,52 +17,24 @@ CSV rows (via benchmarks/common.py conventions):
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 
-import numpy as np
-
-from repro import optim
-from repro.configs.resnet_cifar import RESNET110, ResNetConfig
+from repro import presets
+from repro.configs.resnet_cifar import RESNET110
 from repro.core import timemodel
 from repro.core.timemodel import CASE1_PROFILES, CASE2_PROFILES
-from repro.data.partition import iid_partition
-from repro.data.pipeline import ClientDataset, make_eval_batch
-from repro.data.synthetic import ClassImageTask
-from repro.fed import DTFLTrainer, FedAvgTrainer, HeteroEnv, ResNetAdapter, SimClient
+from benchmarks.common import run_spec
 
 N_BATCHES = 10
 TARGET = 0.75
 MAX_ROUNDS = 30
 
-# 7-tier-capable reduced model (6 bottleneck blocks -> md2..md7 non-empty)
-BENCH_CFG = ResNetConfig(name="resnet-bench", blocks_per_stage=2, width=8,
-                         image_size=16, n_modules=8)
-
-
-@functools.lru_cache(maxsize=None)
-def _setup():
-    task = ClassImageTask(n_classes=10, image_size=BENCH_CFG.image_size, noise=0.6)
-    labels = np.random.default_rng(0).integers(0, 10, 1500)
-    parts = iid_partition(labels, 5, 0)
-    clients = tuple(
-        SimClient(i, ClientDataset(task, labels, parts[i], 32), None) for i in range(5)
-    )
-    return clients, make_eval_batch(task, 512)
-
 
 @functools.lru_cache(maxsize=None)
 def rounds_to_target(tier: int | None) -> int:
     """Real training with everyone in ``tier`` (None = FedAvg)."""
-    clients, ev = _setup()
-    adapter = ResNetAdapter(BENCH_CFG, cost_cfg=RESNET110)
-    env = HeteroEnv(5, switch_every=0, seed=0)
-    if tier is None:
-        tr = FedAvgTrainer(adapter, list(clients), env, optim.adam(1e-3), seed=0)
-    else:
-        tr = DTFLTrainer(adapter, list(clients), env, optim.adam(1e-3),
-                         scheduler=tier, seed=0)
-    logs = tr.run(MAX_ROUNDS, ev, target_acc=TARGET)
+    logs, _ = run_spec(presets.table1_static(tier, rounds=MAX_ROUNDS,
+                                             target=TARGET))
     return len(logs)
 
 

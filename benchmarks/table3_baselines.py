@@ -1,5 +1,5 @@
 """Paper Table 3: time-to-target-accuracy, DTFL vs FedAvg/SplitFed/FedYogi/
-FedGKT/FedAT, IID and non-IID.
+FedGKT/FedAT, IID and non-IID — the ``presets.table3`` scenario per method.
 
 Gradient dynamics on the reduced ResNet; simulated clocks priced on the FULL
 ResNet-110 cost table (paper's main config). Claim reproduced: DTFL reaches
@@ -16,7 +16,8 @@ CSV rows:
 """
 from __future__ import annotations
 
-from benchmarks.common import emit, image_setup, run_method
+from repro import presets
+from benchmarks.common import run_spec
 
 METHODS = ("dtfl", "fedavg", "fedyogi", "splitfed", "fedgkt", "fedat")
 
@@ -24,10 +25,9 @@ METHODS = ("dtfl", "fedavg", "fedyogi", "splitfed", "fedgkt", "fedat")
 def main(emit_fn=print, rounds=10, target=0.55):
     out = []
     for iid in (True, False):
-        cfg, clients, ev = image_setup(n_clients=10, iid=iid)
         for method in METHODS:
-            logs = run_method(method, cfg, clients, ev, rounds=rounds,
-                              target=target, cost_model="resnet-110")
+            logs, _ = run_spec(presets.table3(method, iid=iid, rounds=rounds,
+                                              target=target))
             reached = logs[-1].acc >= target
             out.append((
                 "table3", "iid" if iid else "noniid", method,

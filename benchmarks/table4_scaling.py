@@ -3,13 +3,14 @@
 Reproduces three claims:
 
 * (paper, Table 4) increasing the pool does not hurt DTFL; its simulated
-  time-to-target stays far below FedAvg at every scale.
+  time-to-target stays far below FedAvg at every scale
+  (``presets.table4_accuracy``).
   CSV rows: ``table4,<n_clients>,<method>,<sim_clock_s>,<acc>``
 * (engine) the tier-cohort vectorized round engine (fed/cohort.py) beats the
   per-client sequential loop on real round wall-time (~3.5x at 100 clients
   on this 2-core container under honest block-until-ready timing; grows
   with n) — O(n_tiers) device programs per round instead of
-  O(n_clients x n_batches) dispatches.
+  O(n_clients x n_batches) dispatches (``presets.table4_wall``).
   CSV rows: ``table4_wall,<n_clients>,<exec>,<round_wall_s>`` followed by
   ``table4_speedup,<n_clients>,<x_speedup>``
 * (sharded plane) sharding each cohort's client axis over a device mesh
@@ -36,16 +37,15 @@ def main(emit_fn=print, rounds=8, target=0.5, sizes=(10, 20, 50),
          shard_devices=(2, 4)):
     import jax
 
-    from benchmarks.common import image_setup, run_method
+    from repro import presets
+    from benchmarks.common import run_spec
 
     out = []
     # ---- paper claim: simulated time-to-target vs pool size ---------------
     for n in sizes:
-        cfg, clients, ev = image_setup(n_clients=n, samples=200 * n)
-        part = max(0.1, 2.0 / n)
         for method in ("dtfl", "fedavg"):
-            logs = run_method(method, cfg, clients, ev, rounds=rounds,
-                              target=target, participation=part)
+            logs, _ = run_spec(presets.table4_accuracy(
+                n, method, rounds=rounds, target=target))
             out.append(("table4", n, method, round(logs[-1].clock),
                         round(logs[-1].acc, 3)))
     # ---- engine claim: round wall-time, loop vs cohort vs sharded ---------
@@ -61,17 +61,14 @@ def main(emit_fn=print, rounds=8, target=0.5, sizes=(10, 20, 50),
         walls = {}
         for mode in ("loop", "cohort"):
             walls[mode] = _round_walltime(
-                n, exec_plan=mode,
+                n, exec_mode=mode,
                 timed_rounds=wall_timed_rounds, warmup_rounds=wall_warmup_rounds,
             )
             out.append(("table4_wall", n, mode, round(walls[mode], 3)))
         out.append(("table4_speedup", n, round(walls["loop"] / walls["cohort"], 1)))
         for d in usable:
-            from repro.fed import ExecPlan
-            from repro.launch.mesh import make_sim_mesh
-
             t = _round_walltime(
-                n, exec_plan=ExecPlan.sharded(make_sim_mesh(d)),
+                n, exec_mode="sharded", devices=d,
                 timed_rounds=wall_timed_rounds, warmup_rounds=wall_warmup_rounds,
             )
             out.append(("table4_wall", n, f"sharded_d{d}", round(t, 3)))
@@ -82,41 +79,23 @@ def main(emit_fn=print, rounds=8, target=0.5, sizes=(10, 20, 50),
     return out
 
 
-def _round_walltime(n_clients: int, *, exec_plan, timed_rounds: int,
-                    warmup_rounds: int, samples_per_client: int = 64,
-                    batch: int = 8) -> float:
-    """Steady-state wall-time of one full-participation DTFL round.
-
-    Measures ENGINE overhead scaling — many small clients, small per-step
-    model (width-4 / 8px ResNet) — the regime the sequential loop's
-    O(clients x batches) eager dispatches dominate; gradient quality is
-    irrelevant here (table4's accuracy rows cover that). Warmup rounds
-    absorb jit compilation and let the dynamic scheduler's assignments
-    settle (observations are deterministic, so assignments — and with them
-    the cohort shapes — stabilize after a few rounds)."""
-    import dataclasses
-
+def _round_walltime(n_clients: int, *, exec_mode: str, devices: int | None = None,
+                    timed_rounds: int, warmup_rounds: int) -> float:
+    """Steady-state wall-time of one full-participation DTFL round on the
+    ``presets.table4_wall`` scenario (many small clients, width-4 / 8px
+    micro ResNet — the regime the sequential loop's O(clients x batches)
+    eager dispatches dominate; gradient quality is irrelevant here, table4's
+    accuracy rows cover that). Warmup rounds absorb jit compilation and let
+    the dynamic scheduler's assignments settle (observations are
+    deterministic, so assignments — and with them the cohort shapes —
+    stabilize after a few rounds)."""
     import jax
-    import numpy as np
 
-    from repro import optim
-    from repro.configs.resnet_cifar import RESNET56
-    from repro.data.partition import iid_partition
-    from repro.data.pipeline import ClientDataset
-    from repro.data.synthetic import ClassImageTask
-    from repro.fed import DTFLTrainer, HeteroEnv, ResNetAdapter, SimClient
+    from repro import presets
 
-    cfg = dataclasses.replace(RESNET56.reduced(), width=4, image_size=8)
-    task = ClassImageTask(n_classes=10, image_size=cfg.image_size)
-    labels = np.random.default_rng(0).integers(
-        0, 10, samples_per_client * n_clients)
-    parts = iid_partition(labels, n_clients, 0)
-    clients = [SimClient(i, ClientDataset(task, labels, parts[i], batch), None)
-               for i in range(n_clients)]
-    adapter = ResNetAdapter(cfg, cost_cfg=None)
-    env = HeteroEnv(n_clients, switch_every=0, seed=0)
-    tr = DTFLTrainer(adapter, clients, env, optim.adam(1e-3), seed=0,
-                     exec_plan=exec_plan)
+    fed = presets.table4_wall(n_clients, exec_mode=exec_mode,
+                              devices=devices).build()
+    tr = fed.trainer
     participants = list(range(n_clients))
     for r in range(warmup_rounds):
         tr.train_round(r, participants)

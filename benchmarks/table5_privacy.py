@@ -1,5 +1,8 @@
 """Paper Table 5: privacy integration — distance correlation regularizer
-(alpha sweep) and patch shuffling; accuracy after a fixed round budget.
+(alpha sweep) and patch shuffling; accuracy after a fixed round budget, on
+the ``presets.table5`` scenario (intermediate-difficulty noisy task, where
+the regularizer's capacity cost is visible: paper 87.1 -> 75.6 over the
+alpha sweep).
 
 Claim reproduced: small alpha costs little accuracy; accuracy degrades as
 alpha grows; patch shuffling has minimal impact.
@@ -8,42 +11,18 @@ CSV rows: ``table5,<dcor_<alpha>|patch_shuffle|alpha_trend_ok>,<acc|bool>``
 """
 from __future__ import annotations
 
-import jax
-
-from repro import optim
-from repro.configs.resnet_cifar import RESNET56
-from repro.fed import DTFLTrainer, HeteroEnv, ResNetAdapter
-from benchmarks.common import image_setup
+from repro import presets
+from benchmarks.common import run_spec
 
 
 def main(emit_fn=print, rounds=6):
     out = []
-    # noise 1.0: an intermediate-difficulty task where the regularizer's
-    # capacity cost is visible (paper: 87.1 -> 75.6 over the alpha sweep)
-    import numpy as np
-    from repro.data.partition import iid_partition
-    from repro.data.pipeline import ClientDataset, make_eval_batch
-    from repro.data.synthetic import ClassImageTask
-    from repro.fed import SimClient
-    from repro.configs.resnet_cifar import RESNET56 as _R56
-
-    cfg = _R56.reduced()
-    task = ClassImageTask(n_classes=10, image_size=cfg.image_size, noise=1.0)
-    labels = np.random.default_rng(0).integers(0, 10, 1200)
-    parts = iid_partition(labels, 5, 0)
-    clients = [SimClient(i, ClientDataset(task, labels, parts[i], 32), None)
-               for i in range(5)]
-    ev = make_eval_batch(task, 512)
     accs = {}
     for alpha in (0.0, 0.25, 0.5, 0.75):
-        adapter = ResNetAdapter(cfg, cost_cfg=RESNET56, dcor_alpha=alpha)
-        tr = DTFLTrainer(adapter, clients, HeteroEnv(5, seed=0), optim.adam(1e-3), seed=0)
-        logs = tr.run(rounds, ev)
+        logs, _ = run_spec(presets.table5(alpha, rounds=rounds))
         accs[alpha] = logs[-1].acc
         out.append(("table5", f"dcor_{alpha}", round(logs[-1].acc, 3)))
-    adapter = ResNetAdapter(cfg, cost_cfg=RESNET56, patch_shuffle=True)
-    tr = DTFLTrainer(adapter, clients, HeteroEnv(5, seed=0), optim.adam(1e-3), seed=0)
-    logs = tr.run(rounds, ev)
+    logs, _ = run_spec(presets.table5(patch_shuffle=True, rounds=rounds))
     out.append(("table5", "patch_shuffle", round(logs[-1].acc, 3)))
     out.append(("table5", "alpha_trend_ok", accs[0.0] >= accs[0.75] - 0.02))
     for r in out:

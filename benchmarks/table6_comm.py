@@ -2,11 +2,12 @@
 
 Bytes-per-round and simulated time-to-target vs wire codec, DTFL on the
 paper's heterogeneous environment AND on its most bandwidth-starved profile
-(0.1 CPU / 10 Mbps — Sec. 4.1's slowest class). Compression round-trips run
-INSIDE the jitted cohort programs, so accuracy dynamics are the real
-quantized/sparsified ones, and the time model + tier scheduler price the
-codec-true wire bytes (core/codec.py) — the scheduler can therefore re-tier
-when compression shifts the compute/communication balance.
+(0.1 CPU / 10 Mbps — Sec. 4.1's slowest class), as the ``presets.table6``
+scenario. Compression round-trips run INSIDE the jitted cohort programs, so
+accuracy dynamics are the real quantized/sparsified ones, and the time model
++ tier scheduler price the codec-true wire bytes (core/codec.py) — the
+scheduler can therefore re-tier when compression shifts the
+compute/communication balance.
 
 Claims reproduced/extended:
   (a) identity reproduces the uncompressed path exactly (its row is the
@@ -36,39 +37,26 @@ import argparse
 
 import numpy as np
 
-from benchmarks.common import image_setup, run_method
-from repro.core.timemodel import PAPER_PROFILES, ResourceProfile
-from repro.fed import ExecPlan
+from repro import presets
+from benchmarks.common import run_spec
 
-SLOW_PROFILE = [ResourceProfile(0.1, 10.0)]   # the paper's 10 Mbps class
 CODECS = ("identity", "bf16", "int8", "topk0.05")
-
-
-def _resolve_plan(exec_mode: str, devices: int | None):
-    if exec_mode == "sharded":
-        return ExecPlan.sharded(devices=devices)
-    return exec_mode
 
 
 def main(emit_fn=print, *, rounds=10, target=0.55, n_clients=6, samples=1200,
          codecs=CODECS, exec_modes=("cohort",), engines=("rounds",),
          envs=("slow10mbps", "paper"), devices=None, seed=0):
     rows = []
-    env_profiles = {"slow10mbps": SLOW_PROFILE, "paper": PAPER_PROFILES}
     for env_name in envs:
-        profiles = env_profiles[env_name]
         for exec_mode in exec_modes:
             for engine in engines:
                 base_time = base_up = None
                 for codec in codecs:
-                    cfg, clients, ev = image_setup(n_clients, samples=samples,
-                                                   iid=False, seed=seed)
-                    logs = run_method(
-                        "dtfl", cfg, clients, ev,
-                        rounds=rounds, target=target, codec=codec,
-                        profiles=profiles, engine=engine,
-                        exec_plan=_resolve_plan(exec_mode, devices), seed=seed,
-                    )
+                    logs, _ = run_spec(presets.table6(
+                        codec, env=env_name, exec_mode=exec_mode,
+                        engine=engine, devices=devices, rounds=rounds,
+                        target=target, clients=n_clients, samples=samples,
+                        seed=seed))
                     sim_t = logs[-1].clock
                     up = float(np.mean([l.uplink_bytes for l in logs]))
                     rows.append(("table6", env_name, codec, exec_mode, engine,

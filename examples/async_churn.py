@@ -1,9 +1,10 @@
 """Event-engine tour: sync vs async tiers under client churn.
 
-Runs the same 8-client DTFL setup three ways on the reduced ResNet —
+Runs the same 8-client DTFL scenario (``presets.async_churn``) three ways —
 legacy synchronous rounds, the discrete-event engine with churn (mid-round
-dropouts, arrivals, profile switches), and FedAT-style async tiers — and
-prints each mode's virtual-clock / accuracy trajectory.
+dropouts, arrivals, profile switches), and FedAT-style async tiers — each a
+one-field override of the same spec, and prints each mode's virtual-clock /
+accuracy trajectory.
 
   PYTHONPATH=src:. python examples/async_churn.py --rounds 6
 """
@@ -11,26 +12,7 @@ from __future__ import annotations
 
 import argparse
 
-import numpy as np
-
-from repro import optim
-from repro.configs.resnet_cifar import RESNET56
-from repro.data.partition import iid_partition
-from repro.data.pipeline import ClientDataset, make_eval_batch
-from repro.data.synthetic import ClassImageTask
-from repro.fed import (ChurnModel, DTFLTrainer, HeteroEnv, ResNetAdapter,
-                       SimClient)
-
-
-def build(n_clients: int, seed: int = 0):
-    cfg = RESNET56.reduced()
-    task = ClassImageTask(n_classes=10, image_size=cfg.image_size)
-    labels = np.random.default_rng(seed).integers(0, 10, 1600)
-    parts = iid_partition(labels, n_clients, seed)
-    clients = [SimClient(i, ClientDataset(task, labels, parts[i], 32), None)
-               for i in range(n_clients)]
-    adapter = ResNetAdapter(cfg, cost_cfg=RESNET56)
-    return adapter, clients, make_eval_batch(task, 256)
+from repro import presets
 
 
 def main():
@@ -40,18 +22,15 @@ def main():
     ap.add_argument("--n-groups", type=int, default=2)
     args = ap.parse_args()
 
-    for mode, run_kw in (
-        ("rounds (legacy sync)", dict(engine="rounds")),
-        ("events + churn", dict(
-            engine="events",
-            churn=ChurnModel(args.clients, drop_prob=0.15, switch_prob=0.15,
-                             start_offline_frac=0.25, seed=1))),
-        ("async tiers", dict(engine="async", n_groups=args.n_groups)),
+    base = dict(clients=args.clients, rounds=args.rounds,
+                n_groups=args.n_groups)
+    for mode, spec in (
+        ("rounds (legacy sync)", presets.async_churn(engine="rounds", **base)),
+        ("events + churn", presets.async_churn(engine="events", churn=True,
+                                               **base)),
+        ("async tiers", presets.async_churn(engine="async", **base)),
     ):
-        adapter, clients, ev = build(args.clients)
-        tr = DTFLTrainer(adapter, clients, HeteroEnv(args.clients, seed=0),
-                         optim.adam(1e-3), seed=0)
-        logs = tr.run(args.rounds, ev, **run_kw)
+        logs = spec.build().run()
         last = logs[-1]
         print(f"\n== {mode} ==")
         for l in logs:

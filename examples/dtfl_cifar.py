@@ -1,21 +1,15 @@
 """End-to-end driver: the paper's main experiment, scaled for CPU.
 
-Trains the ResNet on the CIFAR-shaped synthetic task with 10 heterogeneous
-clients, dynamic tier scheduling, non-IID Dirichlet(0.5) partition, profile
-switching — then compares the simulated time-to-accuracy against FedAvg.
+The ``presets.cifar_paper`` scenario: ResNet on the CIFAR-shaped synthetic
+task, 10 heterogeneous clients, dynamic tier scheduling, non-IID
+Dirichlet(0.5) partition, profile switching — DTFL vs FedAvg simulated
+time-to-accuracy, one method override apart.
 
     PYTHONPATH=src python examples/dtfl_cifar.py [--rounds 12]
 """
 import argparse
 
-import numpy as np
-
-from repro import optim
-from repro.configs.resnet_cifar import RESNET56, RESNET110
-from repro.data.partition import dirichlet_partition
-from repro.data.pipeline import ClientDataset, make_eval_batch
-from repro.data.synthetic import ClassImageTask
-from repro.fed import DTFLTrainer, FedAvgTrainer, HeteroEnv, ResNetAdapter, SimClient
+from repro import presets
 
 
 def main():
@@ -25,22 +19,13 @@ def main():
     ap.add_argument("--target", type=float, default=0.7)
     args = ap.parse_args()
 
-    cfg = RESNET56.reduced()
-    task = ClassImageTask(n_classes=10, image_size=cfg.image_size)
-    labels = np.random.default_rng(0).integers(0, 10, 3000)
-    parts = dirichlet_partition(labels, args.clients, 0.5, seed=1)
-    clients = [SimClient(i, ClientDataset(task, labels, parts[i], 32), None)
-               for i in range(args.clients)]
-    ev = make_eval_batch(task, 512)
-    adapter = ResNetAdapter(cfg, cost_cfg=RESNET110)  # times priced full-size
-
     results = {}
-    for name, cls in (("dtfl", DTFLTrainer), ("fedavg", FedAvgTrainer)):
-        env = HeteroEnv(args.clients, switch_every=5, seed=0)
-        tr = cls(adapter, clients, env, optim.adam(1e-3), seed=0)
-        logs = tr.run(args.rounds, ev, target_acc=args.target, verbose=True)
-        results[name] = logs
-        print(f"== {name}: acc={logs[-1].acc:.3f} sim_time={logs[-1].clock:,.0f}s "
+    for method in ("dtfl", "fedavg"):
+        spec = presets.cifar_paper(method, rounds=args.rounds,
+                                   clients=args.clients, target=args.target)
+        logs = spec.build().run(verbose=True)
+        results[method] = logs
+        print(f"== {method}: acc={logs[-1].acc:.3f} sim_time={logs[-1].clock:,.0f}s "
               f"rounds={len(logs)}")
 
     speedup = results["fedavg"][-1].clock / max(results["dtfl"][-1].clock, 1e-9)

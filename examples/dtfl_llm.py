@@ -1,38 +1,31 @@
 """DTFL on an assigned transformer arch: split-offloaded federated LM
-training (smollm-360m reduced) with the dynamic tier scheduler.
+training (smollm-360m reduced) with the dynamic tier scheduler — the
+``presets.llm`` scenario.
 
 Demonstrates that the paper's technique is model-agnostic in this framework:
-the same trainer drives CNNs and every assigned architecture family.
+the same spec drives CNNs and every assigned architecture family (swap
+``model.arch``, and the registry picks the adapter + token-LM data plane).
 
     PYTHONPATH=src python examples/dtfl_llm.py [--arch granite-3-2b]
 """
 import argparse
 
-from repro import optim
-from repro.configs import ASSIGNED_ARCHS, get_config
-from repro.data.synthetic import SeqTask
-from repro.fed import DTFLTrainer, HeteroEnv, SimClient, TransformerAdapter
-from repro.launch.train import SeqClientDataset
+from repro import presets, registry
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="smollm-360m", choices=ASSIGNED_ARCHS)
+    ap.add_argument("--arch", default="smollm-360m",
+                    choices=[n for n in registry.archs.names()
+                             if registry.archs.meta(n)["kind"] == "transformer"])
     ap.add_argument("--rounds", type=int, default=6)
     ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--seq-len", type=int, default=64)
     args = ap.parse_args()
 
-    full = get_config(args.arch)
-    cfg = full.reduced()
-    adapter = TransformerAdapter(cfg, seq_len=args.seq_len, cost_cfg=full)
-    task = SeqTask(vocab=adapter.cfg.vocab)
-    clients = [SimClient(i, SeqClientDataset(task, 2, 8, args.seq_len, i), None)
-               for i in range(args.clients)]
-    ev = next(task.batches(16, args.seq_len, 1, seed=99))
-    env = HeteroEnv(args.clients, switch_every=3, seed=0)
-    tr = DTFLTrainer(adapter, clients, env, optim.adam(2e-3), seed=0)
-    logs = tr.run(args.rounds, ev, verbose=True)
+    spec = presets.llm(args.arch, rounds=args.rounds, clients=args.clients,
+                       seq_len=args.seq_len)
+    logs = spec.build().run(verbose=True)
     print(f"[{args.arch}] next-token acc {logs[0].acc:.3f} -> {logs[-1].acc:.3f}; "
           f"sim clock {logs[-1].clock:,.0f}s "
           f"(times priced on the FULL {args.arch} cost table)")

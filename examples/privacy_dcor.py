@@ -1,43 +1,31 @@
 """Privacy integration (paper §4.4): distance-correlation regularized DTFL.
 
-Trains with alpha in {0, 0.5}; reports the accuracy cost and the achieved
-DCor(x, z) reduction — lower DCor means the uploaded activations reveal less
-about the raw inputs.
+Trains the ``presets.table5`` scenario with alpha in {0, 0.5}; reports the
+accuracy cost and the achieved DCor(x, z) reduction — lower DCor means the
+uploaded activations reveal less about the raw inputs. The Federation
+facade exposes the built adapter/trainer, so the probe reads the trained
+client half directly.
 
     PYTHONPATH=src python examples/privacy_dcor.py
 """
-import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro import optim
-from repro.configs.resnet_cifar import RESNET56
-from repro.data.partition import iid_partition
-from repro.data.pipeline import ClientDataset, make_eval_batch
-from repro.data.synthetic import ClassImageTask
-from repro.fed import DTFLTrainer, HeteroEnv, ResNetAdapter, SimClient
+from repro import presets
+from repro.data.pipeline import make_eval_batch
 from repro.models import resnet as R
 from repro.privacy import dcor
 
 
 def main():
-    cfg = RESNET56.reduced()
-    task = ClassImageTask(n_classes=10, image_size=cfg.image_size, noise=1.0)
-    labels = np.random.default_rng(0).integers(0, 10, 1200)
-    parts = iid_partition(labels, 4, 0)
-    clients = [SimClient(i, ClientDataset(task, labels, parts[i], 32), None)
-               for i in range(4)]
-    ev = make_eval_batch(task, 512)
-
-    probe = make_eval_batch(task, 128)
-    x = jnp.asarray(probe["images"])
-
     for alpha in (0.0, 0.5):
-        adapter = ResNetAdapter(cfg, cost_cfg=RESNET56, dcor_alpha=alpha)
-        tr = DTFLTrainer(adapter, clients, HeteroEnv(4, seed=0), optim.adam(1e-3), seed=0)
-        logs = tr.run(6, ev)
-        cp, _ = adapter.split(tr.params, 1)
-        z = R.client_forward(cp, cfg, x)
+        fed = presets.table5(alpha, rounds=6).with_overrides(
+            {"data.clients": 4}).build()
+        logs = fed.run()
+        # probe on the same synthetic task the clients trained on
+        task = fed.clients[0].dataset.task
+        x = jnp.asarray(make_eval_batch(task, 128)["images"])
+        cp, _ = fed.adapter.split(fed.trainer.params, 1)
+        z = R.client_forward(cp, fed.adapter.cfg, x)
         leak = float(dcor(x, z))
         print(f"alpha={alpha}: acc={logs[-1].acc:.3f}  DCor(x, z)={leak:.3f}")
     print("higher alpha => lower DCor (less leakage) at a small accuracy cost")

@@ -39,6 +39,17 @@ class ResNetConfig:
 RESNET56 = ResNetConfig(name="resnet-56", blocks_per_stage=6)    # 1 stem + 18 bottleneck*3 -> 56 layers
 RESNET110 = ResNetConfig(name="resnet-110", blocks_per_stage=12)  # 110 layers
 
+# 7-tier-capable reduced model (6 bottleneck blocks -> md2..md7 non-empty):
+# the Table-1 protocol trains THIS at every static tier, priced on ResNet-110
+RESNET_BENCH = ResNetConfig(name="resnet-bench", blocks_per_stage=2, width=8,
+                            image_size=16, n_modules=8)
+
+# engine-overhead micro model (width-4 / 8px): the table4 wall-time sweep's
+# many-small-clients regime where dispatch count, not math, dominates
+RESNET_MICRO = ResNetConfig(name="resnet-micro", blocks_per_stage=1, width=4,
+                            image_size=8, n_modules=4)
+
 
 def get_resnet(name: str) -> ResNetConfig:
-    return {"resnet-56": RESNET56, "resnet-110": RESNET110}[name]
+    return {"resnet-56": RESNET56, "resnet-110": RESNET110,
+            "resnet-bench": RESNET_BENCH, "resnet-micro": RESNET_MICRO}[name]

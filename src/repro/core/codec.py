@@ -200,26 +200,15 @@ class TopKCodec(Codec):
 
 def make_codec(spec: "Codec | str | None") -> Codec:
     """Resolve a CLI/ctor codec spec: None | 'identity' | 'bf16' | 'int8' |
-    'topk<frac>' (e.g. ``topk0.05``) | a Codec instance."""
+    'topk<frac>' (e.g. ``topk0.05``) | any codec registered with
+    ``repro.registry.register_codec`` | a Codec instance."""
     if spec is None:
         return IdentityCodec()
     if isinstance(spec, Codec):
         return spec
-    s = str(spec).strip().lower()
-    if s in ("identity", "none", ""):
-        return IdentityCodec()
-    if s == "bf16":
-        return Bf16Codec()
-    if s == "int8":
-        return Int8Codec()
-    if s.startswith("topk"):
-        frac = s[4:].lstrip(":")
-        try:
-            return TopKCodec(float(frac))
-        except ValueError as e:
-            raise ValueError(f"bad topk codec spec {spec!r}: {e}") from None
-    raise ValueError(
-        f"unknown codec {spec!r}; pick identity | bf16 | int8 | topk<frac>")
+    from repro import registry
+
+    return registry.codecs.build(str(spec).strip().lower())
 
 
 # ---------------------------------------------------------------------------

@@ -12,13 +12,9 @@ from repro.fed.splitfed import SplitFedTrainer  # noqa: F401
 from repro.fed.tifl import TiFLTrainer  # noqa: F401
 from repro.fed.dropstrag import DropStragglerTrainer  # noqa: F401
 
-TRAINERS = {
-    "dtfl": DTFLTrainer,
-    "fedavg": FedAvgTrainer,
-    "fedyogi": FedYogiTrainer,
-    "splitfed": SplitFedTrainer,
-    "fedgkt": FedGKTTrainer,
-    "tifl": TiFLTrainer,
-    "drop30": DropStragglerTrainer,
-    "fedat": FedATTrainer,
-}
+# legacy name->class view of the trainer registry (repro/registry.py is the
+# single source of truth; construct through repro.api.ExperimentSpec.build())
+from repro import registry as _registry
+
+TRAINERS = {name: _registry.trainers.load(name)
+            for name in _registry.trainers.names()}

@@ -81,14 +81,13 @@ class DTFLTrainer:
             server_flops=server_flops,
             wires=self.wires,
         )
-        if scheduler == "dynamic":
-            self.sched = DynamicTierScheduler(profile, len(clients))
-        elif isinstance(scheduler, str) and scheduler.startswith("dynamic:"):
-            m = int(scheduler.split(":")[1])  # M-tier deployment (Table 11)
-            allowed = list(range(adapter.n_tiers))[-m:]
-            self.sched = DynamicTierScheduler(profile, len(clients), allowed=allowed)
-        else:
-            self.sched = StaticScheduler(int(scheduler), len(clients))
+        # scheduler specs resolve through the component registry, so
+        # register_scheduler'd strategies work here with no trainer change
+        from repro import registry
+
+        self.sched = registry.schedulers.build(
+            scheduler, profile=profile, n_clients=len(clients),
+            n_tiers=adapter.n_tiers)
         # per-tier aux heads, persistent and aggregated within tier cohorts
         self.aux = {
             m: adapter.aux_init(self._next_key(), m) for m in range(adapter.n_tiers)

@@ -124,6 +124,12 @@ def save_train_state(path: str, trainer, *, round_: int, clock: float,
              "trainer": trainer.save_state()}
     if rng is not None:
         state["rng"] = ckpt.pack_rng(rng)
+    # spec-built trainers (repro.api.Federation) stamp the envelope with the
+    # experiment's identity hash + canonical JSON so resume can verify it is
+    # continuing the SAME experiment
+    stamp = getattr(trainer, "_spec_stamp", None)
+    if stamp is not None:
+        state["spec"] = dict(stamp)
     ckpt.save(path, state)
 
 
@@ -214,7 +220,14 @@ def run_rounds(
 
 def _eval_setup(trainer, eval_batch):
     eval_batch = {k: jnp.asarray(v) for k, v in eval_batch.items()}
-    return jax.jit(trainer.adapter.eval_acc), eval_batch
+    # cache the jitted eval on the trainer: repeated run() calls (and sweep
+    # grid points that adopt this trainer's compiled programs) must not
+    # retrace a fresh jit wrapper per run
+    fn = getattr(trainer, "_eval_jit", None)
+    if fn is None:
+        fn = jax.jit(trainer.adapter.eval_acc)
+        trainer._eval_jit = fn
+    return fn, eval_batch
 
 
 # ===========================================================================

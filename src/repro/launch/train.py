@@ -1,4 +1,12 @@
-"""Training entry point: DTFL federated training on any selectable arch.
+"""Training entry point: CLI flags -> ``ExperimentSpec`` -> ``Federation``.
+
+This module is pure translation: every flag maps onto one field of the
+declarative spec tree in ``repro.api`` and the run itself is
+``spec.build().run()`` — the same path the benchmarks, the sweep plane, and
+the examples use, so the CLI cannot drift from them. String knobs
+(``--method``, ``--scheduler``, ``--codec``, ``--arch``, ``--dataset``,
+``--engine``, ``--exec``) are validated against the component registries at
+argparse time; a typo fails immediately with the registered choice set.
 
 CPU-runnable driver (reduced configs by default); on a real TPU deployment
 the same flags select full configs and the production mesh. Examples:
@@ -13,84 +21,64 @@ import argparse
 import json
 import time
 
-import numpy as np
-
-from repro import optim
-from repro.configs import ASSIGNED_ARCHS, get_config
-from repro.configs.resnet_cifar import get_resnet
-from repro.data.partition import dirichlet_partition, iid_partition
-from repro.data.pipeline import ClientDataset, make_eval_batch
-from repro.data.synthetic import DATASETS, ClassImageTask, SeqTask
-from repro.fed import (ChurnModel, DTFLTrainer, ExecPlan, HeteroEnv,
-                       ResNetAdapter, SimClient, TransformerAdapter, TRAINERS)
+from repro import registry
+from repro.api import (CheckpointSpec, ChurnSpec, CodecSpec, DataSpec,
+                       EngineSpec, EnvSpec, ExecSpec, ExperimentSpec,
+                       ModelSpec, SpecError, TrainerSpec)
+# back-compat re-export: SeqClientDataset lived here before moving to the
+# data plane
+from repro.data.pipeline import SeqClientDataset  # noqa: F401
 
 
-def build_image_setup(cfg, args):
-    base = DATASETS[args.dataset]
-    task = ClassImageTask(n_classes=base.n_classes, image_size=cfg.image_size,
-                          noise=base.noise, seed=base.seed)
-    rng = np.random.default_rng(args.seed)
-    labels = rng.integers(0, task.n_classes, args.samples)
-    part_fn = iid_partition if args.iid else dirichlet_partition
-    parts = part_fn(labels, args.clients, seed=args.seed)
-    clients = [
-        SimClient(i, ClientDataset(task, labels, parts[i], args.batch_size), None)
-        for i in range(args.clients)
-    ]
-    return clients, make_eval_batch(task, 512)
+def _registry_type(reg):
+    """argparse ``type=`` adapter: canonicalize through a registry, failing
+    at PARSE time with the full registered choice set."""
+
+    def parse(s: str):
+        try:
+            return reg.validate(s)
+        except registry.RegistryError as e:
+            raise argparse.ArgumentTypeError(str(e)) from None
+
+    parse.__name__ = reg.kind.replace(" ", "_")
+    return parse
 
 
-class SeqClientDataset:
-    """Token-LM per-client dataset with the ClientDataset interface."""
-
-    def __init__(self, task: SeqTask, n_batches: int, batch_size: int, seq: int, seed: int):
-        self.task, self._n, self.batch_size, self.seq, self.seed = task, n_batches, batch_size, seq, seed
-
-    def __len__(self):
-        return self._n * self.batch_size
-
-    @property
-    def n_batches(self):
-        return self._n
-
-    def epoch(self, epoch_seed: int):
-        yield from self.task.batches(self.batch_size, self.seq, self._n,
-                                     seed=self.seed * 7919 + epoch_seed)
-
-
-def build_lm_setup(cfg, args):
-    task = SeqTask(vocab=cfg.vocab)
-    clients = [
-        SimClient(i, SeqClientDataset(task, 2, args.batch_size, args.seq_len, i), None)
-        for i in range(args.clients)
-    ]
-    ev = next(task.batches(args.batch_size, args.seq_len, 1, seed=99))
-    return clients, ev
-
-
-def main(argv=None):
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="resnet-56",
-                    choices=ASSIGNED_ARCHS + ["resnet-56", "resnet-110"])
-    ap.add_argument("--method", default="dtfl", choices=list(TRAINERS))
+                    type=_registry_type(registry.archs),
+                    help="model family: " + ", ".join(registry.archs.names()))
+    ap.add_argument("--method", default="dtfl",
+                    type=_registry_type(registry.trainers),
+                    help="algorithm: " + ", ".join(registry.trainers.names()))
     ap.add_argument("--clients", type=int, default=10)
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--batch-size", type=int, default=32)
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--samples", type=int, default=2000)
-    ap.add_argument("--dataset", default="cifar10", choices=list(DATASETS))
+    ap.add_argument("--dataset", default="cifar10",
+                    type=_registry_type(registry.datasets),
+                    help="image dataset for resnet archs (transformer archs "
+                         "always train the token-LM task): "
+                         + ", ".join(registry.datasets.names()))
     ap.add_argument("--iid", action="store_true")
     ap.add_argument("--full-size", action="store_true",
                     help="full config (TPU scale) instead of the reduced variant")
-    ap.add_argument("--scheduler", default="dynamic")
-    ap.add_argument("--engine", default=None, choices=["rounds", "events", "async"],
+    ap.add_argument("--scheduler", default="dynamic",
+                    type=_registry_type(registry.schedulers),
+                    help="tier scheduler spec: "
+                         + " | ".join(registry.schedulers.choices()))
+    ap.add_argument("--engine", default=None,
+                    type=lambda s: s if s == "auto"  # the spec-level default
+                    else _registry_type(registry.engines)(s),
                     help="rounds: legacy scalar-clock synchronous loop; "
-                         "events: discrete-event virtual clock (sync semantics, "
-                         "supports churn); async: FedAT-style per-tier pacing "
-                         "with staleness-weighted merges. Default: rounds "
-                         "(async for --method fedat)")
+                         "events: discrete-event virtual clock (sync "
+                         "semantics, supports churn); async: FedAT-style "
+                         "per-tier pacing with staleness-weighted merges. "
+                         "Default: rounds (async for --method fedat)")
     ap.add_argument("--exec", dest="exec_mode", default="cohort",
-                    choices=["cohort", "loop", "sharded"],
+                    type=_registry_type(registry.exec_modes),
                     help="cohort: vectorized tier-cohort programs (one "
                          "vmap+scan per tier); loop: per-client sequential "
                          "debug path; sharded: cohort programs with the "
@@ -102,11 +90,11 @@ def main(argv=None):
                          "--xla_force_host_platform_device_count so N-way "
                          "sharding works on any host")
     ap.add_argument("--codec", default="identity",
+                    type=_registry_type(registry.codecs),
                     help="communication codec for the three wires (activation "
                          "uplink z, client-model download, client-update "
-                         "upload): identity | bf16 | int8 | topk<frac> (e.g. "
-                         "topk0.05, with client-held error feedback). "
-                         "identity is bit-for-bit the uncompressed path; "
+                         "upload): " + " | ".join(registry.codecs.choices())
+                         + ". identity is bit-for-bit the uncompressed path; "
                          "compressed codecs change the simulated comm times "
                          "AND what the tier scheduler re-tiers on")
     ap.add_argument("--n-groups", type=int, default=3,
@@ -128,7 +116,11 @@ def main(argv=None):
     ap.add_argument("--dcor-alpha", type=float, default=0.0)
     ap.add_argument("--switch-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--out", default=None)
+    ap.add_argument("--out", default=None,
+                    help="write the RoundLog stream here as JSON")
+    ap.add_argument("--out-spec", default=None,
+                    help="write the resolved ExperimentSpec JSON here (also "
+                         "accepted by benchmarks/sweep.py --spec)")
     ap.add_argument("--save-every", type=int, default=10,
                     help="checkpoint every N rounds (with --out-ckpt)")
     ap.add_argument("--out-ckpt", default=None,
@@ -137,7 +129,43 @@ def main(argv=None):
                     help="resume from a --out-ckpt envelope: restores "
                          "params, per-tier aux heads, optimizer/scheduler "
                          "state, env profiles, and the RNG streams, then "
-                         "continues deterministically (rounds/events only)")
+                         "continues deterministically (rounds/events only). "
+                         "The envelope's spec stamp must match this run's "
+                         "spec hash")
+    return ap
+
+
+def spec_from_args(args) -> ExperimentSpec:
+    """The flags -> spec translation (see README for the full flag table)."""
+    kind = registry.archs.meta(args.arch)["kind"]
+    churn = None
+    if args.churn:
+        churn = ChurnSpec(drop=args.churn_drop, switch=args.churn_switch,
+                          offline_frac=args.churn_offline_frac,
+                          rejoin=args.churn_rejoin)
+    return ExperimentSpec(
+        model=ModelSpec(arch=args.arch, full_size=args.full_size),
+        data=DataSpec(dataset=args.dataset if kind == "resnet" else "lm",
+                      clients=args.clients, samples=args.samples,
+                      batch_size=args.batch_size, iid=args.iid,
+                      seq_len=args.seq_len),
+        env=EnvSpec(switch_every=args.switch_every),
+        trainer=TrainerSpec(method=args.method, scheduler=args.scheduler,
+                            lr=args.lr, dcor_alpha=args.dcor_alpha),
+        engine=EngineSpec(name=args.engine or "auto", n_groups=args.n_groups,
+                          churn=churn),
+        exec=ExecSpec(mode=args.exec_mode, devices=args.devices),
+        codec=CodecSpec(name=args.codec),
+        checkpoint=CheckpointSpec(path=args.out_ckpt,
+                                  every=max(1, args.save_every),
+                                  resume=args.resume),
+        rounds=args.rounds, target_acc=args.target_acc,
+        participation=args.participation, seed=args.seed,
+    )
+
+
+def main(argv=None):
+    ap = build_parser()
     args = ap.parse_args(argv)
 
     # mesh sizing must land before anything initializes jax's backend
@@ -146,59 +174,20 @@ def main(argv=None):
 
         ensure_sim_devices(args.devices)
 
-    if args.arch.startswith("resnet"):
-        full_cfg = get_resnet(args.arch)
-        cfg = full_cfg if args.full_size else full_cfg.reduced()
-        adapter = ResNetAdapter(cfg, cost_cfg=full_cfg, dcor_alpha=args.dcor_alpha)
-        clients, eval_batch = build_image_setup(cfg, args)
-    else:
-        full_cfg = get_config(args.arch)
-        cfg = full_cfg if args.full_size else full_cfg.reduced()
-        adapter = TransformerAdapter(cfg, seq_len=args.seq_len, cost_cfg=full_cfg,
-                                     dcor_alpha=args.dcor_alpha)
-        clients, eval_batch = build_lm_setup(cfg, args)
+    try:
+        spec = spec_from_args(args)
+    except SpecError as e:
+        ap.error(str(e))
+    if args.out_spec:
+        with open(args.out_spec, "w") as f:
+            f.write(spec.to_json(indent=1))
 
-    env = HeteroEnv(args.clients, switch_every=args.switch_every, seed=args.seed)
-    trainer_cls = TRAINERS[args.method]
-    kw = {"scheduler": args.scheduler} if args.method == "dtfl" else {}
-    kw["exec_plan"] = ExecPlan.from_flags(args.exec_mode, devices=args.devices)
-    kw["codec"] = args.codec
-    trainer = trainer_cls(adapter, clients, env, optim.adam(args.lr), seed=args.seed, **kw)
-
-    # engine defaults per method (fedat is async by construction); an
-    # explicit --engine always wins, including fedat's rounds debug path
-    engine = args.engine or ("async" if args.method == "fedat" else "rounds")
-    churn = None
-    if args.churn:
-        if engine == "rounds":
-            ap.error("--churn requires --engine events or --engine async")
-        churn = ChurnModel(
-            args.clients, drop_prob=args.churn_drop, switch_prob=args.churn_switch,
-            start_offline_frac=args.churn_offline_frac,
-            rejoin_after=args.churn_rejoin, seed=args.seed,
-        )
-    run_kw = {"engine": engine}
-    if engine == "async":
-        run_kw["n_groups"] = args.n_groups
-    if args.out_ckpt:
-        run_kw["checkpoint_path"] = args.out_ckpt
-        run_kw["checkpoint_every"] = max(1, args.save_every)
-    if args.resume:
-        from repro import checkpoint as ckpt
-
-        if engine == "async":
-            ap.error("--resume supports --engine rounds|events only")
-        if args.churn:
-            ap.error("--resume with --churn is unsupported (churn state is "
-                     "not checkpointed)")
-        run_kw["resume"] = ckpt.load(args.resume)
-        print(f"[train] resuming from {args.resume} at round "
-              f"{int(run_kw['resume']['round'])}")
-
+    fed = spec.build()
     t0 = time.time()
-    logs = trainer.run(args.rounds, eval_batch, target_acc=args.target_acc,
-                       participation=args.participation, verbose=True,
-                       churn=churn, **run_kw)
+    try:
+        logs = fed.run(verbose=True)
+    except SpecError as e:  # e.g. resume-envelope spec-hash mismatch
+        ap.error(str(e))
     wall = time.time() - t0
     print(f"[train] {args.method} {args.arch}: {len(logs)} rounds, "
           f"sim_clock={logs[-1].clock:,.0f}s acc={logs[-1].acc:.3f} wall={wall:.0f}s")

@@ -1,0 +1,374 @@
+"""The declarative experiment API: spec validation, serialization, golden
+back-compat vs the pre-spec direct wiring, checkpoint spec-stamping, the
+registries' extension story, and the sweep plane."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro import presets, registry
+from repro.api import (CheckpointSpec, ChurnSpec, CodecSpec, DataSpec,
+                       EngineSpec, ExperimentSpec, Federation, SpecError,
+                       TrainerSpec)
+
+
+# ---------------------------------------------------------------------------
+# serialization
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(presets.PRESETS))
+def test_preset_json_roundtrip(name):
+    spec = presets.PRESETS[name]()
+    back = ExperimentSpec.from_json(spec.to_json())
+    assert back == spec
+    assert back.spec_hash() == spec.spec_hash()
+    assert back.program_key() == spec.program_key()
+
+
+def test_unknown_fields_rejected():
+    with pytest.raises(SpecError, match="unknown field.*spec.bogus"):
+        ExperimentSpec.from_dict({"bogus": 1})
+    with pytest.raises(SpecError, match="spec.trainer.lrr"):
+        ExperimentSpec.from_dict({"trainer": {"lrr": 0.1}})
+    with pytest.raises(SpecError, match="spec.engine.churn.dropp"):
+        ExperimentSpec.from_dict(
+            {"engine": {"name": "events", "churn": {"dropp": 0.5}}})
+
+
+def test_identity_hash_excludes_run_length_knobs():
+    s = presets.quickstart()
+    assert s.with_overrides({"rounds": 99}).spec_hash() == s.spec_hash()
+    assert s.with_overrides({"target_acc": 0.9}).spec_hash() == s.spec_hash()
+    assert s.with_overrides(
+        {"checkpoint.path": "/tmp/x.npz"}).spec_hash() == s.spec_hash()
+    assert s.with_overrides({"seed": 7}).spec_hash() != s.spec_hash()
+    assert s.with_overrides({"trainer.lr": 0.5}).spec_hash() != s.spec_hash()
+
+
+def test_with_overrides_parses_and_revalidates():
+    s = presets.quickstart()
+    s2 = s.with_overrides({"trainer.method": "fedavg", "rounds": "7",
+                           "data.iid": "false"})
+    assert (s2.trainer.method, s2.rounds, s2.data.iid) == ("fedavg", 7, False)
+    with pytest.raises(SpecError):
+        s.with_overrides({"trainer.method": "nope"})
+
+
+# ---------------------------------------------------------------------------
+# spec-time validation: names + illegal combos, with the legal set in errors
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bad, match", [
+    (dict(trainer=dict(method="dynmaic")), "registered trainers"),
+    (dict(trainer=dict(scheduler="dynmaic")), "registered schedulers"),
+    (dict(codec=dict(name="zip9")), "registered codecs"),
+    (dict(exec=dict(mode="warp")), "registered exec mode"),
+    (dict(engine=dict(name="asink")), "registered engines"),
+    (dict(data=dict(dataset="imagenet")), "registered datasets"),
+    (dict(model=dict(arch="resnet-13")), "registered archs"),
+    (dict(env=dict(profiles="fast")), "registered profile pool"),
+])
+def test_unknown_names_list_choices(bad, match):
+    with pytest.raises(SpecError, match=match):
+        ExperimentSpec.from_dict(bad)
+
+
+def test_illegal_combos_rejected_at_spec_time():
+    # fedgkt + codec: the KD protocol is not the codec wire contract
+    with pytest.raises(SpecError, match="fedgkt.*wire compression"):
+        ExperimentSpec(trainer=TrainerSpec(method="fedgkt"),
+                       codec=CodecSpec("int8"))
+    with pytest.raises(SpecError, match="splitfed"):
+        ExperimentSpec(trainer=TrainerSpec(method="splitfed"),
+                       codec=CodecSpec("topk0.1"))
+    # ... but identity-class codecs stay legal for them
+    ExperimentSpec(trainer=TrainerSpec(method="fedgkt"),
+                   codec=CodecSpec("none"))
+    # churn needs an event-driven engine
+    with pytest.raises(SpecError, match="churn requires"):
+        ExperimentSpec(engine=EngineSpec(churn=ChurnSpec()))
+    # resume + async / resume + churn
+    with pytest.raises(SpecError, match="resume supports"):
+        ExperimentSpec(engine=EngineSpec(name="async"),
+                       checkpoint=CheckpointSpec(resume="x.npz"))
+    with pytest.raises(SpecError, match="resume supports"):
+        ExperimentSpec(trainer=TrainerSpec(method="fedat"),
+                       checkpoint=CheckpointSpec(resume="x.npz"))
+    with pytest.raises(SpecError, match="churn"):
+        ExperimentSpec(engine=EngineSpec(name="events", churn=ChurnSpec()),
+                       checkpoint=CheckpointSpec(resume="x.npz"))
+    # async engine needs an async-faithful trainer
+    with pytest.raises(SpecError, match="fedyogi.*async"):
+        ExperimentSpec(trainer=TrainerSpec(method="fedyogi"),
+                       engine=EngineSpec(name="async"))
+    # scheduler is a tier-scheduling (dtfl) knob
+    with pytest.raises(SpecError, match="tier-scheduling"):
+        ExperimentSpec(trainer=TrainerSpec(method="fedavg", scheduler=2))
+    # arch kind <-> data kind
+    with pytest.raises(SpecError, match="needs a lm dataset"):
+        ExperimentSpec.from_dict({"model": {"arch": "smollm-360m"}})
+    with pytest.raises(SpecError, match="needs a image dataset"):
+        ExperimentSpec.from_dict({"data": {"dataset": "lm"}})
+
+
+def test_bare_parameterized_family_names_rejected():
+    """'topk' / 'static' are family names, not specs — they must fail at
+    validation time, not crash inside a build with a raw ValueError."""
+    with pytest.raises(SpecError, match="registered codecs"):
+        ExperimentSpec(codec=CodecSpec("topk"))
+    with pytest.raises(SpecError, match="registered schedulers"):
+        ExperimentSpec(trainer=TrainerSpec(scheduler="static"))
+    with pytest.raises(registry.RegistryError):
+        registry.codecs.validate("topk")
+    with pytest.raises(registry.RegistryError):
+        registry.schedulers.validate("static")
+
+
+def test_table4_accuracy_honors_method():
+    assert presets.table4_accuracy(10, "fedavg").trainer.method == "fedavg"
+    assert presets.table4_accuracy(10, "dtfl").trainer.method == "dtfl"
+
+
+def test_with_overrides_creates_churn_group():
+    s = presets.quickstart().with_overrides(
+        {"engine.name": "events", "engine.churn.drop": 0.2})
+    assert s.engine.churn is not None and s.engine.churn.drop == 0.2
+    # ...and the combo rules still apply to the created group
+    with pytest.raises(SpecError, match="churn requires"):
+        presets.quickstart().with_overrides({"engine.churn.drop": 0.2})
+
+
+def test_scheduler_specs_canonicalized():
+    assert ExperimentSpec(trainer=TrainerSpec(scheduler="3")).trainer.scheduler == 3
+    assert ExperimentSpec(
+        trainer=TrainerSpec(scheduler="dynamic:2")).trainer.scheduler == "dynamic:2"
+    assert CodecSpec("none").name == "identity"
+    assert CodecSpec("  TOPK0.05 ").name == "topk0.05"
+
+
+def test_registry_metadata_matches_class_attributes():
+    """The registry's static supports_* metadata must not drift from the
+    trainer classes (spec validation trusts the registry)."""
+    for name in registry.trainers.names():
+        meta = registry.trainers.meta(name)
+        cls = registry.trainers.load(name)
+        assert meta["supports_async"] == getattr(cls, "supports_async", True), name
+        assert meta["supports_codec"] == getattr(cls, "supports_codec", True), name
+        assert cls.name == name
+
+
+def test_assigned_arch_names_match_configs():
+    from repro.configs import ASSIGNED_ARCHS
+
+    assert set(registry.ASSIGNED_ARCH_NAMES) == set(ASSIGNED_ARCHS)
+
+
+def test_train_py_rejects_bad_knobs_at_parse_time(capsys):
+    from repro.launch.train import main
+
+    for argv in (["--scheduler", "dynmaic"], ["--codec", "zip9"],
+                 ["--method", "fedsgd"], ["--exec", "warp"],
+                 ["--engine", "asink"], ["--dataset", "imagenet"]):
+        with pytest.raises(SystemExit):
+            main(argv)
+        err = capsys.readouterr().err
+        assert "registered" in err, argv
+    # illegal combo -> argparse error carrying the SpecError text
+    with pytest.raises(SystemExit):
+        main(["--churn"])
+    assert "churn requires" in capsys.readouterr().err
+
+
+# ---------------------------------------------------------------------------
+# golden back-compat: flag vector -> bit-identical RoundLog streams through
+# the spec path vs commit f781a4b's direct wiring (replicated inline)
+# ---------------------------------------------------------------------------
+
+def _old_direct_wiring(method: str, engine: str, n_clients=4, samples=400,
+                       rounds=2):
+    """Commit f781a4b's launch/train.py wiring, verbatim (defaults:
+    --arch resnet-56 --dataset cifar10 --batch-size 32 --scheduler dynamic
+    --exec cohort --codec identity --switch-every 50 --seed 0 --lr 1e-3)."""
+    from repro import optim
+    from repro.configs.resnet_cifar import get_resnet
+    from repro.data.partition import dirichlet_partition
+    from repro.data.pipeline import ClientDataset, make_eval_batch
+    from repro.data.synthetic import DATASETS, ClassImageTask
+    from repro.fed import (ExecPlan, HeteroEnv, ResNetAdapter, SimClient,
+                           TRAINERS)
+
+    full_cfg = get_resnet("resnet-56")
+    cfg = full_cfg.reduced()
+    adapter = ResNetAdapter(cfg, cost_cfg=full_cfg, dcor_alpha=0.0)
+    base = DATASETS["cifar10"]
+    task = ClassImageTask(n_classes=base.n_classes, image_size=cfg.image_size,
+                          noise=base.noise, seed=base.seed)
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, task.n_classes, samples)
+    parts = dirichlet_partition(labels, n_clients, seed=0)
+    clients = [SimClient(i, ClientDataset(task, labels, parts[i], 32), None)
+               for i in range(n_clients)]
+    eval_batch = make_eval_batch(task, 512)
+    env = HeteroEnv(n_clients, switch_every=50, seed=0)
+    kw = {"scheduler": "dynamic"} if method == "dtfl" else {}
+    kw["exec_plan"] = ExecPlan.from_flags("cohort", devices=None)
+    kw["codec"] = "identity"
+    trainer = TRAINERS[method](adapter, clients, env, optim.adam(1e-3),
+                               seed=0, **kw)
+    logs = trainer.run(rounds, eval_batch, target_acc=None, participation=1.0,
+                       verbose=False, churn=None, engine=engine)
+    return logs, trainer
+
+
+def _flag_vector_spec(method: str, engine: str, n_clients=4, samples=400,
+                      rounds=2) -> ExperimentSpec:
+    from repro.launch.train import build_parser, spec_from_args
+
+    argv = ["--method", method, "--engine", engine, "--clients", str(n_clients),
+            "--samples", str(samples), "--rounds", str(rounds)]
+    return spec_from_args(build_parser().parse_args(argv))
+
+
+@pytest.mark.parametrize("method", ["dtfl", "fedavg"])
+@pytest.mark.parametrize("engine", ["rounds", "events"])
+def test_golden_backcompat_bit_exact(method, engine):
+    import jax
+
+    old_logs, old_tr = _old_direct_wiring(method, engine)
+    fed = _flag_vector_spec(method, engine).build()
+    new_logs = fed.run()
+    assert len(old_logs) == len(new_logs)
+    for a, b in zip(old_logs, new_logs):
+        assert (a.round, a.clock, a.acc, a.assignment, a.straggler,
+                a.uplink_bytes) == (b.round, b.clock, b.acc, b.assignment,
+                                    b.straggler, b.uplink_bytes)
+    same = jax.tree.map(
+        lambda x, y: bool((np.asarray(x) == np.asarray(y)).all()),
+        old_tr.params, fed.trainer.params)
+    assert all(jax.tree.leaves(same))
+
+
+# ---------------------------------------------------------------------------
+# spec-stamped checkpoints: resume verifies the experiment identity
+# ---------------------------------------------------------------------------
+
+def _tiny_spec(**over):
+    spec = ExperimentSpec(
+        data=DataSpec(clients=3, samples=96, batch_size=16, iid=True,
+                      eval_size=128),
+        rounds=2)
+    return spec.with_overrides(over) if over else spec
+
+
+def test_resume_verifies_spec_stamp(tmp_path):
+    path = str(tmp_path / "state.npz")
+    spec = _tiny_spec(**{"checkpoint.path": path, "checkpoint.every": 1})
+    fed = spec.build()
+    logs = fed.run()
+
+    # same experiment, larger budget: resumes and continues the round count
+    cont = spec.with_overrides({"rounds": 3, "checkpoint.resume": path})
+    logs2 = cont.build().run()
+    assert [l.round for l in logs2] == [2]
+    assert logs2[0].clock > logs[-1].clock
+
+    # different experiment identity: rejected with both hashes in the error
+    other = spec.with_overrides({"trainer.lr": 5e-3,
+                                 "checkpoint.resume": path})
+    with pytest.raises(SpecError, match="different experiment"):
+        other.build().run()
+    # Federation.resume() is the facade-level equivalent
+    with pytest.raises(SpecError, match="spec hash"):
+        other.build().resume(path)
+
+
+def test_resume_continuation_is_bit_deterministic(tmp_path):
+    path = str(tmp_path / "state.npz")
+    full = _tiny_spec(rounds=4).build().run()
+    ck = _tiny_spec(**{"rounds": 2, "checkpoint.path": path,
+                       "checkpoint.every": 2}).build()
+    ck.run()
+    rest = _tiny_spec(**{"rounds": 4, "checkpoint.resume": path}).build().run()
+    tail = full[2:]
+    assert [l.round for l in rest] == [l.round for l in tail]
+    for a, b in zip(rest, tail):
+        assert (a.clock, a.acc, a.straggler) == (b.clock, b.acc, b.straggler)
+
+
+# ---------------------------------------------------------------------------
+# registry extension story: a new codec + scheduler, end to end
+# ---------------------------------------------------------------------------
+
+def test_register_custom_codec_and_scheduler_end_to_end():
+    from repro.core.codec import Codec
+
+    class NoopCodec(Codec):
+        name = "noop"
+
+    registry.register_codec("noop", build=lambda spec: NoopCodec(),
+                            identity=True)
+
+    def build_lowest(spec, *, profile, n_clients, n_tiers):
+        from repro.core.scheduler import StaticScheduler
+
+        return StaticScheduler(n_tiers - 1, n_clients)
+
+    registry.register_scheduler("lowest", build=build_lowest)
+    try:
+        spec = _tiny_spec(**{"codec.name": "noop",
+                             "trainer.scheduler": "lowest"})
+        assert spec.codec.name == "noop" and spec.codec.is_identity
+        fed = spec.build()
+        logs = fed.run()
+        assert len(logs) == 2
+        # the custom scheduler pinned everyone to the lowest tier
+        assert set(logs[-1].assignment.values()) == {fed.adapter.n_tiers - 1}
+        # identity-class custom codecs pass the supports_codec gate
+        _tiny_spec(**{"codec.name": "noop", "trainer.method": "fedgkt"})
+    finally:
+        registry.codecs.unregister("noop")
+        registry.schedulers.unregister("lowest")
+    with pytest.raises(SpecError):
+        _tiny_spec(**{"codec.name": "noop"})
+
+
+# ---------------------------------------------------------------------------
+# sweep plane
+# ---------------------------------------------------------------------------
+
+def test_sweep_grid_expansion():
+    from benchmarks.sweep import expand, parse_grid
+
+    axes = parse_grid("trainer.method=dtfl,fedavg; data.clients=3,4")
+    assert [a[0] for a in axes] == ["trainer.method", "data.clients"]
+    points = expand(presets.quickstart(), axes)
+    assert len(points) == 4
+    combos = {(s.trainer.method, s.data.clients) for _, s in points}
+    assert combos == {("dtfl", 3), ("dtfl", 4), ("fedavg", 3), ("fedavg", 4)}
+    with pytest.raises(SpecError):
+        expand(presets.quickstart(), parse_grid("trainer.method=dtfl,nope"))
+    with pytest.raises(SpecError):
+        parse_grid("rounds")
+
+
+def test_sweep_runs_and_reuses_programs():
+    from benchmarks.sweep import main
+
+    rows = main(emit_fn=lambda s: None, preset="quickstart",
+                grid="data.clients=2,3", rounds=1)
+    header, body = rows[0], rows[1:]
+    assert header[-1] == "programs_reused"
+    assert len(body) == 2
+    # same program key across the grid -> the second point adopts the
+    # first's compiled programs
+    assert [r[-1] for r in body] == [False, True]
+
+
+def test_program_key_tracks_compiled_closures():
+    s = presets.quickstart()
+    assert s.with_overrides({"data.clients": 9}).program_key() == s.program_key()
+    assert s.with_overrides({"seed": 3}).program_key() == s.program_key()
+    for path, val in (("trainer.lr", 0.5), ("codec.name", "int8"),
+                      ("trainer.method", "fedavg"), ("exec.mode", "loop"),
+                      ("data.batch_size", 16), ("trainer.dcor_alpha", 0.1)):
+        assert s.with_overrides({path: val}).program_key() != s.program_key(), path
