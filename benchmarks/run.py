@@ -2,12 +2,25 @@
 # ``table,<keys...>,<values...>``; this driver runs them all, or a subset:
 #
 #   python benchmarks/run.py --only table4_scaling,roofline
+#
+# It is also the wall-time regression gate: ``--check BENCH_table4.json``
+# re-times only table4_scaling's wall rows (loop/cohort/sharded/chunked
+# planes + the 100k-population regime) and exits non-zero if any is more
+# than TOLERANCE x slower than the committed baseline;
+# ``--write-baseline BENCH_table4.json`` refreshes the baseline from a
+# fresh run on the current machine.
 from __future__ import annotations
 
 import argparse
 import importlib
+import json
 import sys
 import time
+
+# >1.5x slower than baseline fails the gate: wide enough to absorb shared-CI
+# noise, tight enough to catch an accidentally re-introduced O(population)
+# loop (those regress by integer factors, not percents)
+TOLERANCE = 1.5
 
 SUITES = [
     "table1_tier_times",
@@ -23,12 +36,91 @@ SUITES = [
 ]
 
 
+def _fresh_walls() -> dict[str, float]:
+    """Re-time table4_scaling's wall rows only (``sizes=()`` skips the
+    accuracy sweeps), keyed ``<n>/<plane>`` and ``pop<P>/s<S>/c<C>``.
+
+    Gate scope is reduced-but-representative so a CI run stays in minutes:
+    the n=10 wall row per plane (an O(population) regression shows up at
+    every n) plus the full 100k-registry/512-sample population regime. The
+    3 warmup rounds let the scheduler's assignments — and with them the
+    compiled cohort shapes — settle, so the single timed round is
+    steady-state, not compile noise."""
+    from benchmarks import table4_scaling
+
+    walls: dict[str, float] = {}
+    for row in table4_scaling.main(emit_fn=lambda _line: None, sizes=(),
+                                   wall_sizes=(10,), wall_timed_rounds=1,
+                                   wall_warmup_rounds=3, chunk_size=4):
+        if row[0] == "table4_wall":
+            walls[f"{row[1]}/{row[2]}"] = float(row[3])
+        elif row[0] == "table4_population":
+            walls[f"pop{row[1]}/s{row[2]}/c{row[3]}"] = float(row[4])
+    return walls
+
+
+def _check_baseline(path: str, out: str | None = None) -> int:
+    with open(path) as f:
+        base = json.load(f)
+    tol = base.get("meta", {}).get("tolerance", TOLERANCE)
+    fresh = _fresh_walls()
+    if out:  # CI uploads the fresh measurement next to the verdict
+        with open(out, "w") as f:
+            json.dump({"meta": {"suite": "table4_scaling", "fresh": True},
+                       "walls": fresh}, f, indent=1, sort_keys=True)
+            f.write("\n")
+    failures = 0
+    for key, ref in sorted(base["walls"].items()):
+        got = fresh.get(key)
+        if got is None:
+            # device-dependent rows (sharded_dN) legitimately vanish on
+            # hosts with fewer visible devices — note, don't fail
+            print(f"check: {key}: not measured on this host "
+                  "(baseline {ref}s) — skipped", file=sys.stderr)
+            continue
+        verdict = "ok" if got <= tol * ref else "REGRESSION"
+        print(f"check: {key}: {got:.3f}s vs baseline {ref:.3f}s "
+              f"(limit {tol:.1f}x) {verdict}")
+        failures += verdict != "ok"
+    for key in sorted(set(fresh) - set(base["walls"])):
+        print(f"check: {key}: new row ({fresh[key]:.3f}s), no baseline — "
+              "refresh with --write-baseline", file=sys.stderr)
+    return failures
+
+
+def _write_baseline(path: str) -> None:
+    walls = _fresh_walls()
+    with open(path, "w") as f:
+        json.dump({"meta": {"suite": "table4_scaling",
+                            "tolerance": TOLERANCE},
+                   "walls": walls}, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {len(walls)} wall baselines to {path}")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated suite subset (e.g. "
                          "table4_scaling,roofline); default: all")
+    ap.add_argument("--check", default=None, metavar="BENCH_table4.json",
+                    help="regression gate: re-time the table4 wall rows and "
+                         f"fail if any exceeds {TOLERANCE}x its baseline")
+    ap.add_argument("--write-baseline", default=None,
+                    metavar="BENCH_table4.json",
+                    help="re-time the table4 wall rows and write them as "
+                         "the new baseline")
+    ap.add_argument("--out", default=None,
+                    help="with --check: also write the fresh wall "
+                         "measurements here (the CI artifact)")
     args = ap.parse_args(argv)
+    if args.check and args.write_baseline:
+        ap.error("--check and --write-baseline are exclusive")
+    if args.check:
+        sys.exit(1 if _check_baseline(args.check, out=args.out) else 0)
+    if args.write_baseline:
+        _write_baseline(args.write_baseline)
+        return
     selected = SUITES
     if args.only:
         names = [s.strip() for s in args.only.split(",") if s.strip()]

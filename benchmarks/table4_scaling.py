@@ -21,10 +21,21 @@ Reproduces three claims:
   CSV rows: ``table4_wall,<n_clients>,sharded_d<d>,<round_wall_s>`` and
   ``table4_shard_speedup,<n_clients>,<d>,<x_vs_single_device_cohort>``
   (emitted only for device counts actually visible to jax).
+* (population plane) a 100k-client lazy registry with a fixed 512-client
+  sample per round trains under ``exec=chunked`` with per-round wall-time
+  and materialized state independent of the registry size — the chunked
+  plane also joins the wall sweep above as ``table4_wall,<n>,chunked,...``.
+  CSV rows: ``table4_population,<population>,<sample>,<chunk>,
+  <round_wall_s>,<clients_touched>`` plus an informational
+  ``table4_population_mem,<population>,<peak_rss_mb>`` row.
 
 Run directly (``python benchmarks/table4_scaling.py [--full] [--devices N]``)
 for the 10->500-client sweep; ``--devices N`` forces N simulated host
 devices (must be set at launch, before jax initializes).
+
+``benchmarks/run.py --check BENCH_table4.json`` replays only the wall-time
+rows of this module and fails on a >1.5x regression against the committed
+baseline (``--write-baseline`` refreshes it).
 """
 from __future__ import annotations
 
@@ -34,7 +45,8 @@ import time
 
 def main(emit_fn=print, rounds=8, target=0.5, sizes=(10, 20, 50),
          wall_sizes=(10, 50, 100), wall_timed_rounds=2, wall_warmup_rounds=3,
-         shard_devices=(2, 4)):
+         shard_devices=(2, 4), chunk_size=16,
+         population_regimes=((100_000, 512, 64),)):
     import jax
 
     from repro import presets
@@ -59,9 +71,10 @@ def main(emit_fn=print, rounds=8, target=0.5, sizes=(10, 20, 50),
               file=sys.stderr)
     for n in wall_sizes:
         walls = {}
-        for mode in ("loop", "cohort"):
+        for mode in ("loop", "cohort", "chunked"):
             walls[mode] = _round_walltime(
                 n, exec_mode=mode,
+                chunk_size=chunk_size if mode == "chunked" else None,
                 timed_rounds=wall_timed_rounds, warmup_rounds=wall_warmup_rounds,
             )
             out.append(("table4_wall", n, mode, round(walls[mode], 3)))
@@ -74,12 +87,19 @@ def main(emit_fn=print, rounds=8, target=0.5, sizes=(10, 20, 50),
             out.append(("table4_wall", n, f"sharded_d{d}", round(t, 3)))
             out.append(("table4_shard_speedup", n, d,
                         round(walls["cohort"] / t, 2)))
+    # ---- population claim: O(sample) work/state from a 100k registry ------
+    for pop, sample, chunk in population_regimes:
+        out.extend(_population_rows(
+            pop, sample, chunk,
+            timed_rounds=wall_timed_rounds, warmup_rounds=1,
+        ))
     for r in out:
         emit_fn(",".join(str(x) for x in r))
     return out
 
 
 def _round_walltime(n_clients: int, *, exec_mode: str, devices: int | None = None,
+                    chunk_size: int | None = None,
                     timed_rounds: int, warmup_rounds: int) -> float:
     """Steady-state wall-time of one full-participation DTFL round on the
     ``presets.table4_wall`` scenario (many small clients, width-4 / 8px
@@ -94,7 +114,7 @@ def _round_walltime(n_clients: int, *, exec_mode: str, devices: int | None = Non
     from repro import presets
 
     fed = presets.table4_wall(n_clients, exec_mode=exec_mode,
-                              devices=devices).build()
+                              devices=devices, chunk_size=chunk_size).build()
     tr = fed.trainer
     participants = list(range(n_clients))
     for r in range(warmup_rounds):
@@ -107,6 +127,55 @@ def _round_walltime(n_clients: int, *, exec_mode: str, devices: int | None = Non
         tr.train_round(r, participants)
         jax.block_until_ready(tr.params)
     return (time.perf_counter() - t0) / timed_rounds
+
+
+def _population_rows(population: int, sample_size: int, chunk_size: int, *,
+                     timed_rounds: int, warmup_rounds: int) -> list:
+    """Round wall-time of the population regime: sample ``sample_size``
+    clients per round from a ``population``-client lazy registry and train
+    them chunked. Also reports how many registry slots actually
+    materialized — the O(sample), not O(population), claim — and (stderr +
+    info row) the process peak RSS, which stays flat as ``population``
+    grows because never-sampled clients are a dict miss, not an object."""
+    import resource
+
+    import jax
+    import numpy as np
+
+    from repro import presets
+
+    fed = presets.table4_population(
+        population, sample_size=sample_size, chunk_size=chunk_size).build()
+    tr = fed.trainer
+    rng = np.random.default_rng(0)
+    rounds = warmup_rounds + timed_rounds
+
+    def sample(r):
+        return sorted(rng.choice(population, sample_size, replace=False).tolist())
+
+    for r in range(warmup_rounds):
+        tr.train_round(r, sample(r))
+    jax.block_until_ready(tr.params)
+    t0 = time.perf_counter()
+    for r in range(warmup_rounds, rounds):
+        tr.train_round(r, sample(r))
+        jax.block_until_ready(tr.params)
+    wall = (time.perf_counter() - t0) / timed_rounds
+
+    touched = tr.clients.n_touched
+    limit = rounds * sample_size + 1  # +1: trainer ctor materializes client 0
+    assert touched <= limit, (
+        f"population regime leaked state: {touched} clients materialized "
+        f"from a {population} registry after {rounds} rounds of "
+        f"{sample_size} samples (limit {limit})")
+    peak_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss // 1024
+    print(f"table4_population: {touched}/{population} clients materialized, "
+          f"peak rss {peak_mb} MB", file=sys.stderr)
+    return [
+        ("table4_population", population, sample_size, chunk_size,
+         round(wall, 3), touched),
+        ("table4_population_mem", population, peak_mb),
+    ]
 
 
 if __name__ == "__main__":

@@ -99,6 +99,12 @@ class DataSpec:
     seq_len: int = 128
     n_batches: int = 2
     eval_size: int | None = None
+    # population plane: a lazy registry of this many clients replaces the
+    # dense ``clients`` list; per-client data/profile state is derived from
+    # (seed, cid) on FIRST participation, so 10^5-10^6 registries cost
+    # O(sampled). In population mode ``samples`` counts samples PER CLIENT
+    # (a dense-mode global pool would itself be O(population)).
+    population: int | None = None
 
     def __post_init__(self):
         _validated(registry.datasets, self.dataset)
@@ -109,6 +115,14 @@ class DataSpec:
         _positive("data.n_batches", self.n_batches)
         if self.eval_size is not None:
             _positive("data.eval_size", self.eval_size)
+        if self.population is not None:
+            _positive("data.population", self.population)
+
+    @property
+    def n_clients(self) -> int:
+        """Registered clients: the lazy registry size in population mode,
+        the dense ``clients`` count otherwise."""
+        return self.clients if self.population is None else self.population
 
     @property
     def kind(self) -> str:
@@ -158,10 +172,15 @@ class TrainerSpec:
     local_epochs: int = 1
     dcor_alpha: float = 0.0
     patch_shuffle: bool = False
+    # absolute participants per round (population plane: "sample 512 of the
+    # 10^6 registry"); None keeps fractional ``participation`` sizing
+    sample_size: int | None = None
     options: dict = field(default_factory=dict)
 
     def __post_init__(self):
         _validated(registry.trainers, self.method)
+        if self.sample_size is not None:
+            _positive("trainer.sample_size", self.sample_size)
         canon = _validated(registry.schedulers, self.scheduler)
         object.__setattr__(
             self, "scheduler",
@@ -213,15 +232,24 @@ class EngineSpec:
 
 @dataclass(frozen=True)
 class ExecSpec:
-    """Execution plane: ``loop`` | ``cohort`` | ``sharded`` (+ mesh size)."""
+    """Execution plane: ``loop`` | ``cohort`` | ``sharded`` (+ mesh size) |
+    ``chunked`` (+ ``chunk_size`` clients per device program — memory stays
+    O(chunk), bit-equal to ``cohort``)."""
 
     mode: str = "cohort"
     devices: int | None = None
+    chunk_size: int | None = None
 
     def __post_init__(self):
         _validated(registry.exec_modes, self.mode)
         if self.devices is not None:
             _positive("exec.devices", self.devices)
+        if self.chunk_size is not None:
+            _positive("exec.chunk_size", self.chunk_size)
+            if self.mode != "chunked":
+                raise SpecError(
+                    f"exec.chunk_size applies to exec.mode='chunked' only; "
+                    f"got mode={self.mode!r}")
 
 
 @dataclass(frozen=True)
@@ -337,6 +365,17 @@ class ExperimentSpec:
                 "engine.churn requires the event-driven engines "
                 "(engine='events' or 'async'); the scalar-clock 'rounds' "
                 "loop cannot express mid-round churn")
+        # population plane combos (lazy registry + fixed-size sampling)
+        if self.data.population is not None and engine == "async":
+            raise SpecError(
+                "data.population (the lazy client registry) supports "
+                "engine='rounds'|'events' only; the async engine speed-"
+                "groups the FULL population, which defeats lazy state")
+        if self.trainer.sample_size is not None and engine == "async":
+            raise SpecError(
+                "trainer.sample_size is a rounds/events sampling knob; the "
+                "async engine groups the full population (use "
+                "participation)")
         if self.checkpoint.resume:
             if engine == "async":
                 raise SpecError(
@@ -422,7 +461,8 @@ class ExperimentSpec:
         return (t.method, m.arch, m.full_size, d.dataset, d.batch_size,
                 d.seq_len, d.n_batches, t.lr, t.local_epochs, t.dcor_alpha,
                 t.patch_shuffle, tuple(sorted(t.options.items())),
-                self.codec.name, self.exec.mode, self.exec.devices)
+                self.codec.name, self.exec.mode, self.exec.devices,
+                self.exec.chunk_size)
 
     # ------------------------------------------------------------------
     def build(self, *, reuse: "Federation | None" = None) -> "Federation":
@@ -531,16 +571,26 @@ class Federation:
             from repro.core.timemodel import ResourceProfile
 
             profiles = [ResourceProfile(f, b) for f, b in profiles]
-        self.env = HeteroEnv(spec.data.clients, profiles=profiles,
-                             switch_every=spec.env.switch_every,
-                             seed=spec.seed)
+        if spec.data.population is not None:
+            # population plane: O(1)-construction env; profiles draw from
+            # (seed, cid) on first touch instead of a dense assignment array
+            from repro.fed import LazyHeteroEnv
+
+            self.env = LazyHeteroEnv(spec.data.n_clients, profiles=profiles,
+                                     switch_every=spec.env.switch_every,
+                                     seed=spec.seed)
+        else:
+            self.env = HeteroEnv(spec.data.clients, profiles=profiles,
+                                 switch_every=spec.env.switch_every,
+                                 seed=spec.seed)
 
         cls = registry.trainers.load(spec.trainer.method)
         kw = dict(spec.trainer.options)
         if registry.trainers.meta(spec.trainer.method).get("scheduler_aware"):
             kw["scheduler"] = spec.trainer.scheduler
         kw["exec_plan"] = ExecPlan.from_flags(spec.exec.mode,
-                                              devices=spec.exec.devices)
+                                              devices=spec.exec.devices,
+                                              chunk_size=spec.exec.chunk_size)
         kw["codec"] = spec.codec.name
         self.trainer = cls(self.adapter, self.clients, self.env,
                            optim.adam(spec.trainer.lr), seed=spec.seed,
@@ -575,12 +625,14 @@ class Federation:
 
             c = sp.engine.churn
             churn = ChurnModel(
-                sp.data.clients, drop_prob=c.drop, switch_prob=c.switch,
+                sp.data.n_clients, drop_prob=c.drop, switch_prob=c.switch,
                 start_offline_frac=c.offline_frac, rejoin_after=c.rejoin,
                 seed=sp.seed if c.seed is None else c.seed)
         run_kw = {"engine": engine}
         if engine == "async":
             run_kw["n_groups"] = sp.engine.n_groups
+        if sp.trainer.sample_size is not None:
+            run_kw["sample_size"] = sp.trainer.sample_size
         if sp.checkpoint.path:
             run_kw["checkpoint_path"] = sp.checkpoint.path
             run_kw["checkpoint_every"] = sp.checkpoint.every
@@ -646,6 +698,32 @@ def _build_image_data(spec: ExperimentSpec, cfg):
     ds = registry.datasets.meta(spec.data.dataset)
     task = ClassImageTask(n_classes=ds["n_classes"], image_size=cfg.image_size,
                           noise=ds["noise"], seed=ds["seed"])
+    if spec.data.population is not None:
+        # population plane: each client's labels are a pure function of
+        # (seed, cid) — iid uniform, or a per-client Dirichlet(alpha) class
+        # mix — built on FIRST participation by the lazy store's factory, so
+        # a 10^6-client registry allocates nothing up front. ``samples`` is
+        # per client here (a global label pool would itself be O(population)).
+        from repro.fed import ClientStore
+        from repro.fed.population import cid_rng
+
+        per, bs, n_cls = spec.data.samples, spec.data.batch_size, task.n_classes
+        iid, alpha, seed = spec.data.iid, spec.data.alpha, spec.seed
+
+        def factory(cid: int):
+            r = cid_rng(seed, 21, cid)
+            if iid:
+                labels = r.integers(0, n_cls, per)
+            else:
+                labels = r.choice(n_cls, size=per, p=r.dirichlet([alpha] * n_cls))
+            # seed=cid+1: distinct per-client batch-shuffle streams (0 is
+            # the dense path's shared legacy stream)
+            return SimClient(
+                cid, ClientDataset(task, labels, np.arange(per), bs, seed=cid + 1),
+                None)
+
+        return (ClientStore(spec.data.population, factory),
+                make_eval_batch(task, spec.data.eval_size or 512))
     rng = np.random.default_rng(spec.seed)
     labels = rng.integers(0, task.n_classes, spec.data.samples)
     if spec.data.iid:
@@ -667,12 +745,22 @@ def _build_lm_data(spec: ExperimentSpec, cfg):
     from repro.fed import SimClient
 
     task = SeqTask(vocab=cfg.vocab)
-    clients = [
-        SimClient(i, SeqClientDataset(task, spec.data.n_batches,
-                                      spec.data.batch_size, spec.data.seq_len,
-                                      i), None)
-        for i in range(spec.data.clients)
-    ]
+    if spec.data.population is not None:
+        from repro.fed import ClientStore
+
+        d = spec.data
+        clients = ClientStore(
+            d.population,
+            lambda cid: SimClient(
+                cid, SeqClientDataset(task, d.n_batches, d.batch_size,
+                                      d.seq_len, cid), None))
+    else:
+        clients = [
+            SimClient(i, SeqClientDataset(task, spec.data.n_batches,
+                                          spec.data.batch_size,
+                                          spec.data.seq_len, i), None)
+            for i in range(spec.data.clients)
+        ]
     ev = next(task.batches(spec.data.eval_size or spec.data.batch_size,
                            spec.data.seq_len, 1, seed=99))
     return clients, ev

@@ -110,8 +110,65 @@ class _ClientState:
     last_obs_tier: int | None = None
 
 
+class _LazyClientStates:
+    """Per-client scheduler state, materialized on first access.
+
+    Looks like the dense ``list[_ClientState]`` it replaced (``len``, ``[]``,
+    iteration — tests and small-n callers iterate it), but a never-observed
+    client allocates no state until someone touches it, so a million-client
+    registry costs O(sampled participants), not O(population). Iteration
+    materializes everything and is reserved for test-sized registries.
+    """
+
+    def __init__(self, n: int, init_tier: int):
+        self._n = int(n)
+        self._init_tier = int(init_tier)
+        self._states: dict[int, _ClientState] = {}
+
+    def __len__(self) -> int:
+        return self._n
+
+    def __getitem__(self, k: int) -> _ClientState:
+        k = int(k)
+        if not 0 <= k < self._n:
+            raise IndexError(f"client id {k} out of range [0, {self._n})")
+        st = self._states.get(k)
+        if st is None:
+            st = self._states[k] = _ClientState(tier=self._init_tier)
+        return st
+
+    def __iter__(self):
+        for k in range(self._n):
+            yield self[k]
+
+    @property
+    def n_touched(self) -> int:
+        return len(self._states)
+
+    def touched(self) -> list[int]:
+        return sorted(self._states)
+
+    def touched_items(self) -> list[tuple[int, _ClientState]]:
+        return sorted(self._states.items())
+
+    def is_touched(self, k: int) -> bool:
+        return int(k) in self._states
+
+    def compact(self, keep) -> None:
+        keep = set(int(k) for k in keep)
+        self._states = {k: v for k, v in self._states.items() if k in keep}
+
+
 class DynamicTierScheduler:
-    """Stateful per-round scheduler. Tiers are 0-based here (paper: 1-based)."""
+    """Stateful per-round scheduler. Tiers are 0-based here (paper: 1-based).
+
+    The estimate matrix is INCREMENTAL: each client's T_hat row is cached
+    and only recomputed after a new observation lands for that client (or
+    for a never-observed client, served from one shared default row), so a
+    round's scheduling costs O(observed-this-round + participants), never
+    O(population). ``_row_recomputes`` counts row rebuilds — the
+    regression test pins that it tracks observations, not registry size.
+    """
 
     def __init__(self, profile: TierProfile, n_clients: int, *, ema_alpha: float = 0.5,
                  init_tier: int | None = None, allowed: list[int] | None = None):
@@ -121,7 +178,10 @@ class DynamicTierScheduler:
         # (the full-client option always exists; more tiers add offloading)
         self.allowed = sorted(allowed) if allowed is not None else list(range(self.M))
         init_tier = self.allowed[-1] if init_tier is None else init_tier
-        self.clients = [_ClientState(tier=init_tier) for _ in range(n_clients)]
+        self.clients = _LazyClientStates(n_clients, init_tier)
+        self._rows: dict[int, np.ndarray] = {}   # cid -> cached T_hat row
+        self._default_row: np.ndarray | None = None
+        self._row_recomputes = 0
 
     # ------------------------------------------------------------------
     # Algorithm 1, lines 21-23: measure & update histories
@@ -141,6 +201,7 @@ class DynamicTierScheduler:
         st.ema.setdefault(tier, EMA()).update(compute)
         st.last_obs_tier = tier
         st.tier = tier
+        self._rows.pop(k, None)    # row depends on (nu, nb, ema): recompute lazily
 
     def observe_cohort(self, ks, tiers, total_client_times, nus, n_batches) -> None:
         """Vectorized :meth:`observe` for a whole round's participants.
@@ -159,27 +220,54 @@ class DynamicTierScheduler:
             st.ema.setdefault(int(tier), EMA()).update(float(c))
             st.last_obs_tier = int(tier)
             st.tier = int(tier)
+            self._rows.pop(int(k), None)
 
     # ------------------------------------------------------------------
     # Algorithm 1, lines 24-29: per-tier estimates
     # ------------------------------------------------------------------
+    def _state_row(self, nu: float, nb: float, last_obs_tier, ema_value) -> np.ndarray:
+        """One client's T_hat row (Eq. 5 composition). Same elementwise IEEE
+        expressions as the old dense (K, M) rebuild, so cached rows are
+        bit-identical to a from-scratch recompute."""
+        prof = self.profile
+        t_com = (prof.z_bytes * nb + prof.param_bytes) / nu                   # (M,)
+        t_srv = prof.t_server_ref * nb                                        # (M,)
+        if last_obs_tier is None:
+            t_cli = prof.t_client_ref * nb                                    # no-obs fallback
+        else:
+            m0 = last_obs_tier
+            t_cli = prof.t_client_ref / prof.t_client_ref[m0] * ema_value     # EMA'd round time
+        return np.maximum(t_cli + t_com, t_srv + t_com)
+
+    def _row(self, k: int) -> np.ndarray:
+        """Cached T_hat row for client ``k``; recomputed only after a new
+        observation invalidated it. Never-observed clients share ONE default
+        row (their state is uniform), so they cost no per-client work."""
+        k = int(k)
+        row = self._rows.get(k)
+        if row is not None:
+            return row
+        if not self.clients.is_touched(k):
+            if self._default_row is None:
+                d = _ClientState(tier=0)    # tier does not enter the row
+                self._default_row = self._state_row(
+                    float(d.nu), float(d.n_batches), None, None)
+                self._row_recomputes += 1
+            return self._default_row
+        st = self.clients[k]
+        m0 = st.last_obs_tier
+        row = self._state_row(
+            float(st.nu), float(st.n_batches), m0,
+            st.ema[m0].value if m0 is not None else None)
+        self._rows[k] = row
+        self._row_recomputes += 1
+        return row
+
     def estimate_matrix(self, ks: list[int]) -> np.ndarray:
         """T_hat_k(m) for every k in ``ks`` and every m, as a (K, M) matrix
-        (Eq. 5 composition, vectorized)."""
-        prof = self.profile
-        nb = np.array([self.clients[k].n_batches for k in ks], float)
-        nu = np.array([self.clients[k].nu for k in ks], float)
-        t_com = (prof.z_bytes[None, :] * nb[:, None]
-                 + prof.param_bytes[None, :]) / nu[:, None]                   # (K, M)
-        t_srv = prof.t_server_ref[None, :] * nb[:, None]                      # (K, M)
-        t_cli = prof.t_client_ref[None, :] * nb[:, None]                      # no-obs fallback
-        for i, k in enumerate(ks):
-            st = self.clients[k]
-            if st.last_obs_tier is not None:
-                m0 = st.last_obs_tier
-                base = st.ema[m0].value                                       # EMA'd round time
-                t_cli[i] = prof.t_client_ref / prof.t_client_ref[m0] * base
-        return np.maximum(t_cli + t_com, t_srv + t_com)
+        (Eq. 5 composition). Assembled from per-client cached rows — cost is
+        O(rows invalidated since the last call), not O(population)."""
+        return np.stack([self._row(k) for k in ks])
 
     def estimate(self, k: int) -> np.ndarray:
         """T_hat_k(m) for all m (Eq. 5 composition)."""
@@ -205,6 +293,14 @@ class DynamicTierScheduler:
     def round_time(self, assign: dict[int, int]) -> float:
         """Estimated straggler time under an assignment."""
         return max(self.estimate(k)[m] for k, m in assign.items())
+
+    def compact(self, keep) -> None:
+        """Drop per-client state/rows of clients outside ``keep`` (permanent
+        departures); a compacted client that returns restarts from the
+        default (never-observed) state."""
+        self.clients.compact(keep)
+        keep = set(int(k) for k in keep)
+        self._rows = {k: v for k, v in self._rows.items() if k in keep}
 
 
 class StaticScheduler:

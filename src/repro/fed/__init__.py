@@ -5,6 +5,7 @@ from repro.fed.dtfl import DTFLTrainer  # noqa: F401
 from repro.fed.engine import RoundLog, RoundPlan  # noqa: F401
 from repro.fed.execplan import ExecPlan  # noqa: F401
 from repro.fed.fedat import FedATTrainer  # noqa: F401
+from repro.fed.population import ClientStore, LazyHeteroEnv  # noqa: F401
 from repro.fed.fedavg import FedAvgTrainer  # noqa: F401
 from repro.fed.fedgkt import FedGKTTrainer  # noqa: F401
 from repro.fed.fedyogi import FedYogiTrainer  # noqa: F401

@@ -153,16 +153,36 @@ class BaseTrainer:
             return st
         return jax.tree.map(lambda x: np.zeros(x.shape, x.dtype), self.params)
 
-    def _gather_ef(self, co):
-        trees = [self._client_ef(k) for k in co.cids]
-        if co.n_pad:
-            trees += [jax.tree.map(np.zeros_like, trees[0])] * co.n_pad
+    def _gather_ef_cids(self, cids, *, pad_to: int | None = None):
+        trees = [self._client_ef(k) for k in cids]
+        n_pad = 0 if pad_to is None else pad_to - len(trees)
+        if n_pad:
+            z = (jax.tree.map(np.zeros_like, trees[0]) if trees
+                 else jax.tree.map(
+                     lambda x: np.zeros(x.shape, x.dtype), self.params))
+            trees += [z] * n_pad
         return jax.tree.map(
             lambda *xs: np.stack([np.asarray(x) for x in xs]), *trees)
 
-    def _scatter_ef(self, co, ef) -> None:
-        for i, cid in enumerate(co.cids):
+    def _scatter_ef_cids(self, cids, ef) -> None:
+        for i, cid in enumerate(cids):
             self._ef[cid] = jax.tree.map(lambda x: np.asarray(x[i]), ef)
+
+    def _gather_ef(self, co):
+        return self._gather_ef_cids(co.cids, pad_to=co.size + co.n_pad)
+
+    def _scatter_ef(self, co, ef) -> None:
+        self._scatter_ef_cids(co.cids, ef)
+
+    # ------------------------------------------------------------------
+    def compact(self, keep) -> None:
+        """Drop per-client state (cached data clients, EF residuals) of
+        clients outside ``keep`` — PERMANENT departures only; the engines
+        never call this (transiently-offline churn clients keep state)."""
+        keep = set(int(k) for k in keep)
+        if hasattr(self.clients, "compact"):
+            self.clients.compact(keep)
+        self._ef = {c: st for c, st in self._ef.items() if c in keep}
 
     # ------------------------------------------------------------------
     # resumable training state (engine.save_train_state envelope body)
@@ -197,7 +217,8 @@ class BaseTrainer:
         event_engine.restore_trainer(self, path)
 
     def run(self, n_rounds: int, eval_batch: dict, *, target_acc: float | None = None,
-            participation: float = 1.0, eval_every: int = 1, verbose: bool = False,
+            participation: float = 1.0, sample_size: int | None = None,
+            eval_every: int = 1, verbose: bool = False,
             engine: str = "rounds", churn=None, n_groups: int = 3,
             checkpoint_path: str | None = None, checkpoint_every: int = 10,
             resume: dict | None = None,
@@ -210,7 +231,8 @@ class BaseTrainer:
         )
         if engine == "events":
             return event_engine.run_events(
-                self, n_rounds, eval_batch, churn=churn, **common)
+                self, n_rounds, eval_batch, churn=churn,
+                sample_size=sample_size, **common)
         if engine == "async":
             if not self.supports_async:
                 raise ValueError(
@@ -218,12 +240,16 @@ class BaseTrainer:
                     "algorithm lives outside train_group); run it with "
                     "engine='rounds' or 'events', or use method 'fedat'"
                 )
+            if sample_size is not None:
+                raise ValueError("sample_size is a rounds/events knob; the "
+                                 "async engine groups the full population")
             return event_engine.run_async(
                 self, n_rounds, eval_batch, churn=churn, n_groups=n_groups,
                 **common)
         if engine != "rounds":
             raise ValueError(f"unknown engine {engine!r}")
-        return event_engine.run_rounds(self, n_rounds, eval_batch, **common)
+        return event_engine.run_rounds(
+            self, n_rounds, eval_batch, sample_size=sample_size, **common)
 
     # ------------------------------------------------------------------
     # time helpers (analytic, from the shared cost table)
@@ -341,6 +367,30 @@ class BaseTrainer:
                     return codec_lib.uplink_rt(codec, trained, ref)
 
             self._full_cohort_program = run
+        if self.exec_plan.mode == "chunked":
+            # the SAME compiled cohort program, invoked at chunk width with
+            # per-chunk outputs reassembled on host: the device training
+            # working set is O(chunk_size), the aggregation below is the
+            # identical ``weighted_average_cohorts`` call — bit-equal to the
+            # cohort plane by construction (see ExecPlan)
+            cs = self.exec_plan.chunk_size
+            trees, ws = [], []
+            for co in cohorts:
+                chunks = []
+                for sl in cohort_engine.chunk_slices(co.mask.shape[1], cs):
+                    b, m = cohort_engine.slice_clients(co.batches, co.mask, sl)
+                    if self.codec.stateful:
+                        cids_c = co.cids[sl.start:min(sl.stop, co.size)]
+                        ef = self._gather_ef_cids(cids_c, pad_to=cs)
+                        up, ef2 = self._full_cohort_program(self.params, b, m, ef)
+                        self._scatter_ef_cids(cids_c, ef2)
+                    else:
+                        up = self._full_cohort_program(self.params, b, m)
+                    chunks.append(jax.tree.map(np.asarray, up))
+                trees.append(jax.tree.map(
+                    lambda *xs: np.concatenate(xs)[:co.size], *chunks))
+                ws.append([weigh(k) for k in co.cids])
+            return aggregation.weighted_average_cohorts(trees, ws)
         trees, ws = [], []
         for co in cohorts:
             if self.codec.stateful:

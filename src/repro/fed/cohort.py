@@ -104,6 +104,25 @@ def build_cohorts(
     return cohorts
 
 
+def chunk_slices(n_cols: int, chunk_size: int) -> list[slice]:
+    """Client-axis slices cutting a padded cohort into fixed-size chunks.
+
+    The chunked ExecPlan builds cohorts with ``pad_multiple=chunk_size``, so
+    ``n_cols`` (real + pad clients) is always divisible and every chunk has
+    the same static shape — one compiled per-chunk program serves them all.
+    """
+    if n_cols % chunk_size:
+        raise ValueError(
+            f"cohort client axis {n_cols} is not a multiple of chunk_size "
+            f"{chunk_size}; build cohorts with pad_multiple=chunk_size")
+    return [slice(i, i + chunk_size) for i in range(0, n_cols, chunk_size)]
+
+
+def slice_clients(batches: dict, mask: np.ndarray, sl: slice) -> tuple[dict, np.ndarray]:
+    """One client-chunk's view of a cohort's stacked batches + step mask."""
+    return {k: v[:, sl] for k, v in batches.items()}, mask[:, sl]
+
+
 def _pad_steps(a: np.ndarray, s_max: int) -> np.ndarray:
     if len(a) == s_max:
         return a

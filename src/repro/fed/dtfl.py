@@ -278,12 +278,14 @@ class DTFLTrainer:
         return tree, float(sum(len(self.clients[k].dataset) for k in trained))
 
     def _train_participants(self, r, participants, assign):
-        """ExecPlan dispatch: loop | cohort | sharded."""
+        """ExecPlan dispatch: loop | cohort | sharded | chunked."""
         mode = self.exec_plan.mode
         if mode == "loop":
             return self._train_sequential(r, participants, assign)
         if mode == "sharded":
             return self._train_sharded(r, participants, assign)
+        if mode == "chunked":
+            return self._train_chunked(r, participants, assign)
         return self._train_cohorts(r, participants, assign)
 
     def async_groups(self, cids: list[int], n_groups: int) -> list[list[int]]:
@@ -372,6 +374,54 @@ class DTFLTrainer:
             )
         return aggregation.combine_weighted_sums(sums, totals, like=self.params)
 
+    def _train_chunked(self, r, participants, assign):
+        """The cohort round with each cohort's client axis cut into
+        ``exec_plan.chunk_size``-client chunks, each run through the SAME
+        compiled per-tier cohort program at chunk width — so the device
+        training working set (stacked batches, per-client optimizer states,
+        activations) is O(chunk_size), not O(cohort), which is what lets a
+        512-participant sample train on a small host. Per-chunk outputs are
+        concatenated on the host, pad columns dropped, and the identical
+        ``weighted_average_cohorts`` aggregation runs on the reassembled
+        stack — equivalence with ``_train_cohorts`` is by construction
+        (eager per-chunk invocations of the same program are bitwise equal
+        to slices of the full-cohort vmap; a ``lax.scan`` over chunks is
+        not — see ``ExecPlan``)."""
+        cs = self.exec_plan.chunk_size
+        merged_trees, merged_ws = [], []
+        aux_by_tier: dict[int, list] = {}
+        cohorts = cohort_engine.build_cohorts(
+            self.clients, participants, assign, r, self.local_epochs,
+            pad_multiple=cs,
+        )
+        for co in cohorts:
+            prog = self._cohort_program(co.tier)
+            mchunks, achunks = [], []
+            for sl in cohort_engine.chunk_slices(co.mask.shape[1], cs):
+                b, m = cohort_engine.slice_clients(co.batches, co.mask, sl)
+                if self.codec.stateful:
+                    cids_c = co.cids[sl.start:min(sl.stop, co.size)]
+                    efc, efa = self._gather_ef_cids(cids_c, co.tier, pad_to=cs)
+                    merged, upa, efc2, efa2 = prog(
+                        self.params, self.aux[co.tier], b, m, efc, efa)
+                    self._scatter_ef_cids(cids_c, co.tier, efc2, efa2)
+                else:
+                    merged, upa = prog(self.params, self.aux[co.tier], b, m)
+                mchunks.append(jax.tree.map(np.asarray, merged))
+                achunks.append(jax.tree.map(np.asarray, upa))
+            n = co.size    # reassemble the cohort stack, drop pad columns
+            cat = lambda *xs: np.concatenate(xs)[:n]
+            merged_trees.append(jax.tree.map(cat, *mchunks))
+            w = [len(self.clients[k].dataset) for k in co.cids]
+            merged_ws.append(w)
+            aux_by_tier.setdefault(co.tier, []).append(
+                (jax.tree.map(cat, *achunks), w))
+        for tier, parts in aux_by_tier.items():
+            self.aux[tier] = aggregation.weighted_average_cohorts(
+                [a for a, _ in parts], [w for _, w in parts]
+            )
+        return aggregation.weighted_average_cohorts(merged_trees, merged_ws)
+
     def _train_sequential(self, r, participants, assign):
         """Per-client loop (debug escape hatch; O(clients x batches) dispatches)."""
         round_aux = dict(self.aux)  # cohort members share the round-start head
@@ -429,25 +479,57 @@ class DTFLTrainer:
         zero = lambda t: jax.tree.map(lambda x: np.zeros(x.shape, x.dtype), t)
         return zero(cp), zero(self.aux[tier])
 
-    def _gather_ef(self, co):
-        """Stack the cohort's residuals along the client axis (zeros for the
-        sharded plane's pad clients)."""
-        pairs = [self._client_ef(k, co.tier) for k in co.cids]
-        if co.n_pad:
-            zc = jax.tree.map(np.zeros_like, pairs[0][0])
-            za = jax.tree.map(np.zeros_like, pairs[0][1])
-            pairs += [(zc, za)] * co.n_pad
+    def _gather_ef_cids(self, cids, tier: int, *, pad_to: int | None = None):
+        """Stack ``cids``'s residuals along the client axis, zero-padded up
+        to ``pad_to`` clients (chunk tails / sharded pad clients — zero
+        residuals are exact EF no-ops for weight-0 members)."""
+        pairs = [self._client_ef(k, tier) for k in cids]
+        n_pad = 0 if pad_to is None else pad_to - len(pairs)
+        if n_pad:
+            if pairs:
+                zc = jax.tree.map(np.zeros_like, pairs[0][0])
+                za = jax.tree.map(np.zeros_like, pairs[0][1])
+            else:
+                cp, _ = self.adapter.split(self.params, tier)
+                zero = lambda t: jax.tree.map(
+                    lambda x: np.zeros(x.shape, x.dtype), t)
+                zc, za = zero(cp), zero(self.aux[tier])
+            pairs += [(zc, za)] * n_pad
         stack = lambda trees: jax.tree.map(
             lambda *xs: np.stack([np.asarray(x) for x in xs]), *trees)
         return stack([c for c, _ in pairs]), stack([a for _, a in pairs])
 
-    def _scatter_ef(self, co, efc, efa) -> None:
-        for i, cid in enumerate(co.cids):
+    def _scatter_ef_cids(self, cids, tier: int, efc, efa) -> None:
+        for i, cid in enumerate(cids):
             self._ef[cid] = {
-                "tier": co.tier,
+                "tier": tier,
                 "c": jax.tree.map(lambda x: np.asarray(x[i]), efc),
                 "a": jax.tree.map(lambda x: np.asarray(x[i]), efa),
             }
+
+    def _gather_ef(self, co):
+        """Stack the cohort's residuals along the client axis (zeros for the
+        sharded plane's pad clients)."""
+        return self._gather_ef_cids(co.cids, co.tier, pad_to=co.size + co.n_pad)
+
+    def _scatter_ef(self, co, efc, efa) -> None:
+        self._scatter_ef_cids(co.cids, co.tier, efc, efa)
+
+    # ------------------------------------------------------------------
+    def compact(self, keep) -> None:
+        """Drop per-client state — cached data clients, scheduler history,
+        EF residuals — of clients outside ``keep`` (PERMANENT departures).
+        The engines never call this: a transiently-offline churn client
+        keeps its EMA/EF history so rejoining is bit-identical with or
+        without the absence. A compacted client that returns restarts from
+        the never-sampled state (data rebuilds bit-identically from the
+        lazy factory; scheduler/EF state restarts from defaults)."""
+        keep = set(int(k) for k in keep)
+        if hasattr(self.clients, "compact"):
+            self.clients.compact(keep)
+        if hasattr(self.sched, "compact"):
+            self.sched.compact(keep)
+        self._ef = {c: st for c, st in self._ef.items() if c in keep}
 
     # ------------------------------------------------------------------
     # checkpointing (server state: global params + per-tier aux heads +
@@ -461,17 +543,23 @@ class DTFLTrainer:
                  "key": np.asarray(self.key),
                  "env": self.env.save_state()}
         if isinstance(self.sched, DynamicTierScheduler):
+            # sparse: only TOUCHED clients ride the envelope (untouched ones
+            # are pure defaults and rebuild lazily), so checkpoint size is
+            # O(sampled participants) even for a 10^6-client registry
+            items = self.sched.clients.touched_items()
             ema_t, ema_v = [], []
-            for cid, cl in enumerate(self.sched.clients):
+            for cid, cl in items:
                 for tier, ema in cl.ema.items():
                     ema_t.append([cid, tier])
                     ema_v.append(ema.value)
             state["sched"] = {
-                "tiers": np.array([c.tier for c in self.sched.clients]),
-                "nu": np.array([c.nu for c in self.sched.clients]),
-                "nb": np.array([c.n_batches for c in self.sched.clients]),
-                "obs": np.array([-1 if c.last_obs_tier is None else c.last_obs_tier
-                                 for c in self.sched.clients]),
+                "cids": np.array([c for c, _ in items], dtype=np.int64),
+                "tiers": np.array([cl.tier for _, cl in items], dtype=np.int64),
+                "nu": np.array([cl.nu for _, cl in items], dtype=np.float64),
+                "nb": np.array([cl.n_batches for _, cl in items], dtype=np.int64),
+                "obs": np.array(
+                    [-1 if cl.last_obs_tier is None else cl.last_obs_tier
+                     for _, cl in items], dtype=np.int64),
                 "ema_keys": np.array(ema_t or [[0, 0]][:0]).reshape(-1, 2),
                 "ema_vals": np.array(ema_v),
             }
@@ -496,11 +584,21 @@ class DTFLTrainer:
             self.env.load_state(state["env"])
         if "sched" in state and isinstance(self.sched, DynamicTierScheduler):
             sc = state["sched"]
-            for cid, cl in enumerate(self.sched.clients):
-                cl.tier = int(sc["tiers"][cid])
-                cl.nu = float(sc["nu"][cid])
-                cl.n_batches = int(sc["nb"][cid])
-                obs = int(sc["obs"][cid])
+            if "cids" in sc:
+                # sparse envelope: reset to all-default, then replay the
+                # touched clients — untouched ids stay lazy defaults
+                self.sched.clients.compact([])
+                cids = [int(c) for c in np.asarray(sc["cids"]).reshape(-1)]
+            else:
+                # legacy dense envelope (one entry per registered client)
+                cids = list(range(len(np.asarray(sc["tiers"]).reshape(-1))))
+            self.sched._rows.clear()
+            for i, cid in enumerate(cids):
+                cl = self.sched.clients[cid]
+                cl.tier = int(sc["tiers"][i])
+                cl.nu = float(sc["nu"][i])
+                cl.n_batches = int(sc["nb"][i])
+                obs = int(sc["obs"][i])
                 cl.last_obs_tier = None if obs < 0 else obs
             for (cid, tier), v in zip(sc["ema_keys"], sc["ema_vals"]):
                 e = EMA()
@@ -530,6 +628,7 @@ class DTFLTrainer:
         *,
         target_acc: float | None = None,
         participation: float = 1.0,
+        sample_size: int | None = None,
         eval_every: int = 1,
         verbose: bool = False,
         checkpoint_path: str | None = None,
@@ -547,11 +646,16 @@ class DTFLTrainer:
         )
         if engine == "events":
             return event_engine.run_events(
-                self, n_rounds, eval_batch, churn=churn, **common)
+                self, n_rounds, eval_batch, churn=churn,
+                sample_size=sample_size, **common)
         if engine == "async":
+            if sample_size is not None:
+                raise ValueError("sample_size is a rounds/events knob; the "
+                                 "async engine groups the full population")
             return event_engine.run_async(
                 self, n_rounds, eval_batch, churn=churn, n_groups=n_groups,
                 **common)
         if engine != "rounds":
             raise ValueError(f"unknown engine {engine!r}")
-        return event_engine.run_rounds(self, n_rounds, eval_batch, **common)
+        return event_engine.run_rounds(
+            self, n_rounds, eval_batch, sample_size=sample_size, **common)

@@ -164,6 +164,20 @@ def restore_trainer(trainer, path: str) -> None:
     trainer.load_state(state["trainer"] if "trainer" in state else state)
 
 
+def _round_sample_size(n_clients: int, participation: float,
+                       sample_size: int | None) -> int:
+    """Participants per round. ``sample_size`` is the population plane's
+    absolute count (a 512-sample round over a 10^6 registry); ``None``
+    keeps the legacy fractional ``participation`` sizing bit-for-bit.
+    ``Generator.choice(n, k, replace=False)`` is O(k) time and memory
+    (Floyd's algorithm), so sampling never scales with the registry."""
+    if sample_size is None:
+        return max(1, int(participation * n_clients))
+    if sample_size < 1:
+        raise ValueError(f"sample_size must be >= 1, got {sample_size}")
+    return min(int(sample_size), n_clients)
+
+
 def run_rounds(
     trainer,
     n_rounds: int,
@@ -171,6 +185,7 @@ def run_rounds(
     *,
     target_acc: float | None = None,
     participation: float = 1.0,
+    sample_size: int | None = None,
     eval_every: int = 1,
     verbose: bool = False,
     checkpoint_path: str | None = None,
@@ -190,7 +205,7 @@ def run_rounds(
         start_round, clock, last_acc = apply_resume(
             trainer, resume, rng, engine="rounds")
     next_round = start_round
-    n_part = max(1, int(participation * len(trainer.clients)))
+    n_part = _round_sample_size(len(trainer.clients), participation, sample_size)
     for r in range(start_round, n_rounds):
         participants = sorted(
             rng.choice(len(trainer.clients), n_part, replace=False).tolist()
@@ -241,6 +256,7 @@ def run_events(
     *,
     target_acc: float | None = None,
     participation: float = 1.0,
+    sample_size: int | None = None,
     eval_every: int = 1,
     verbose: bool = False,
     churn=None,
@@ -266,8 +282,14 @@ def run_events(
     next_round = start_round
 
     for r in range(start_round, n_rounds):
-        pool = churn.begin_round(r) if churn is not None else np.arange(n_clients)
-        n_part = max(1, min(len(pool), int(participation * n_clients)))
+        # no churn: pass the population SIZE, not an arange — choice(int)
+        # consumes the identical rng stream as choice(arange(int)) but stays
+        # O(sample) instead of materializing an O(population) id array
+        pool = churn.begin_round(r) if churn is not None else n_clients
+        pool_n = len(pool) if churn is not None else n_clients
+        cap = (int(participation * n_clients) if sample_size is None
+               else _round_sample_size(n_clients, participation, sample_size))
+        n_part = max(1, min(pool_n, cap))
         participants = sorted(rng.choice(pool, n_part, replace=False).tolist())
 
         plan = trainer.plan_round(r, participants)

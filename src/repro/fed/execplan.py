@@ -31,16 +31,34 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-MODES = ("loop", "cohort", "sharded")
+MODES = ("loop", "cohort", "sharded", "chunked")
+
+DEFAULT_CHUNK_SIZE = 16
 
 
 @dataclass(frozen=True)
 class ExecPlan:
-    """Execution mode + mesh/shard/pad policy for one trainer."""
+    """Execution mode + mesh/shard/pad/chunk policy for one trainer.
+
+    ``mode="chunked"`` runs each (tier, shape) cohort as a sequence of
+    fixed-size client CHUNKS through the SAME compiled per-tier cohort
+    program at chunk width — the device training working set (stacked
+    batches, per-client optimizer states, activations) is O(chunk_size),
+    not O(cohort), which is what lets a 512-participant sample from a 100k
+    registry train on a small host. Per-chunk outputs reassemble on the
+    host and flow through the identical aggregation, so the round is
+    bit-for-bit equal to ``cohort`` BY CONSTRUCTION — pinned by
+    ``tests/test_population.py``. (Eager per-chunk invocations of the same
+    program are bitwise equal to slices of the full-cohort vmap; folding
+    across chunks inside one program is NOT — XLA CPU compiles conv
+    gradients differently inside a ``lax.scan`` body and re-fuses weighted
+    sums across the chunk boundary — so the chunk loop stays on the host.)
+    """
 
     mode: str = "cohort"
     mesh: Any = None          # jax.sharding.Mesh, required for mode="sharded"
     axis: str = "clients"
+    chunk_size: int | None = None   # client-chunk length, mode="chunked" only
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -49,6 +67,17 @@ class ExecPlan:
             raise ValueError("ExecPlan(mode='sharded') needs a mesh; use "
                              "ExecPlan.sharded(devices=N) or pass one from "
                              "launch.mesh.make_sim_mesh")
+        if self.mode == "chunked":
+            if self.chunk_size is None:
+                object.__setattr__(self, "chunk_size", DEFAULT_CHUNK_SIZE)
+            if self.chunk_size < 1:
+                raise ValueError(
+                    f"ExecPlan(mode='chunked') needs chunk_size >= 1, got "
+                    f"{self.chunk_size!r}")
+        elif self.chunk_size is not None:
+            raise ValueError(
+                f"chunk_size is a mode='chunked' knob; mode={self.mode!r} "
+                "does not take one")
 
     # ------------------------------------------------------------------
     @classmethod
@@ -60,6 +89,10 @@ class ExecPlan:
         return cls(mode="cohort")
 
     @classmethod
+    def chunked(cls, chunk_size: int | None = None) -> "ExecPlan":
+        return cls(mode="chunked", chunk_size=chunk_size)
+
+    @classmethod
     def sharded(cls, mesh=None, *, devices: int | None = None) -> "ExecPlan":
         if mesh is None:
             from repro.launch.mesh import make_sim_mesh
@@ -69,10 +102,13 @@ class ExecPlan:
         return cls(mode="sharded", mesh=mesh, axis=axis)
 
     @classmethod
-    def from_flags(cls, exec_mode: str, *, devices: int | None = None) -> "ExecPlan":
-        """CLI adapter: ``--exec`` + ``--devices`` -> ExecPlan."""
+    def from_flags(cls, exec_mode: str, *, devices: int | None = None,
+                   chunk_size: int | None = None) -> "ExecPlan":
+        """CLI adapter: ``--exec`` + ``--devices``/``--chunk-size`` -> ExecPlan."""
         if exec_mode == "sharded":
             return cls.sharded(devices=devices)
+        if exec_mode == "chunked":
+            return cls.chunked(chunk_size)
         return cls(mode=exec_mode)
 
     @classmethod
@@ -91,12 +127,18 @@ class ExecPlan:
 
     @property
     def pad_multiple(self) -> int:
-        """Client-axis divisibility required by this plan's sharding."""
-        return self.n_shards if self.mode == "sharded" else 1
+        """Client-axis divisibility required by this plan's sharding/chunking."""
+        if self.mode == "sharded":
+            return self.n_shards
+        if self.mode == "chunked":
+            return self.chunk_size
+        return 1
 
     def describe(self) -> str:
         if self.mode == "sharded":
             return f"sharded[{self.axis}={self.n_shards}]"
+        if self.mode == "chunked":
+            return f"chunked[{self.chunk_size}]"
         return self.mode
 
     # ------------------------------------------------------------------

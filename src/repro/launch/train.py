@@ -53,6 +53,15 @@ def build_parser() -> argparse.ArgumentParser:
                     type=_registry_type(registry.trainers),
                     help="algorithm: " + ", ".join(registry.trainers.names()))
     ap.add_argument("--clients", type=int, default=10)
+    ap.add_argument("--population", type=int, default=None,
+                    help="lazy client registry size (100k+ scale): per-client "
+                         "state (data pipeline, env profile, scheduler row, "
+                         "EF residual) materializes on first participation. "
+                         "--samples becomes PER-CLIENT dataset size; combine "
+                         "with --sample-size and --exec chunked")
+    ap.add_argument("--sample-size", type=int, default=None,
+                    help="exact clients sampled per round (instead of "
+                         "--participation * population); rounds/events only")
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--batch-size", type=int, default=32)
     ap.add_argument("--seq-len", type=int, default=128)
@@ -83,12 +92,18 @@ def build_parser() -> argparse.ArgumentParser:
                          "vmap+scan per tier); loop: per-client sequential "
                          "debug path; sharded: cohort programs with the "
                          "client axis split over a device mesh (psum "
-                         "aggregation) — see --devices")
+                         "aggregation) — see --devices; chunked: the cohort "
+                         "programs run chunk_size clients at a time (device "
+                         "memory O(chunk), bit-identical to cohort) — see "
+                         "--chunk-size")
     ap.add_argument("--devices", type=int, default=None,
                     help="mesh size for --exec sharded (default: all visible "
                          "devices). On CPU, forces "
                          "--xla_force_host_platform_device_count so N-way "
                          "sharding works on any host")
+    ap.add_argument("--chunk-size", type=int, default=None,
+                    help="client-chunk length for --exec chunked (default "
+                         "16)")
     ap.add_argument("--codec", default="identity",
                     type=_registry_type(registry.codecs),
                     help="communication codec for the three wires (activation "
@@ -146,15 +161,18 @@ def spec_from_args(args) -> ExperimentSpec:
     return ExperimentSpec(
         model=ModelSpec(arch=args.arch, full_size=args.full_size),
         data=DataSpec(dataset=args.dataset if kind == "resnet" else "lm",
-                      clients=args.clients, samples=args.samples,
+                      clients=args.clients, population=args.population,
+                      samples=args.samples,
                       batch_size=args.batch_size, iid=args.iid,
                       seq_len=args.seq_len),
         env=EnvSpec(switch_every=args.switch_every),
         trainer=TrainerSpec(method=args.method, scheduler=args.scheduler,
-                            lr=args.lr, dcor_alpha=args.dcor_alpha),
+                            lr=args.lr, dcor_alpha=args.dcor_alpha,
+                            sample_size=args.sample_size),
         engine=EngineSpec(name=args.engine or "auto", n_groups=args.n_groups,
                           churn=churn),
-        exec=ExecSpec(mode=args.exec_mode, devices=args.devices),
+        exec=ExecSpec(mode=args.exec_mode, devices=args.devices,
+                      chunk_size=args.chunk_size),
         codec=CodecSpec(name=args.codec),
         checkpoint=CheckpointSpec(path=args.out_ckpt,
                                   every=max(1, args.save_every),

@@ -67,7 +67,8 @@ def table4_accuracy(n: int = 10, method: str = "dtfl", *, rounds: int = 8,
 
 
 def table4_wall(n: int = 10, *, exec_mode: str = "cohort",
-                devices: int | None = None) -> ExperimentSpec:
+                devices: int | None = None,
+                chunk_size: int | None = None) -> ExperimentSpec:
     """Table 4 wall-time sweep: many small clients on the micro ResNet —
     the engine-overhead regime (the harness times ``train_round`` itself)."""
     return ExperimentSpec(
@@ -75,8 +76,28 @@ def table4_wall(n: int = 10, *, exec_mode: str = "cohort",
                         cost_model="self"),
         data=DataSpec(clients=n, samples=64 * n, batch_size=8, iid=True),
         env=EnvSpec(switch_every=0),
-        exec=ExecSpec(mode=exec_mode, devices=devices),
+        exec=ExecSpec(mode=exec_mode, devices=devices,
+                      chunk_size=chunk_size),
         rounds=8,
+    )
+
+
+def table4_population(population: int = 100_000, *, sample_size: int = 512,
+                      chunk_size: int = 64, rounds: int = 3,
+                      samples: int = 64) -> ExperimentSpec:
+    """Table 4 population regime: a 100k-client lazy registry with a fixed
+    512-client sample per round, trained in fixed-size chunks so device and
+    host memory stay O(sample), never O(population). ``samples`` is the
+    PER-CLIENT dataset size (lazy per-cid pipelines)."""
+    return ExperimentSpec(
+        model=ModelSpec(arch="resnet-micro", full_size=True,
+                        cost_model="self"),
+        data=DataSpec(population=population, samples=samples, batch_size=8,
+                      iid=True),
+        env=EnvSpec(switch_every=0),
+        trainer=TrainerSpec(sample_size=sample_size),
+        exec=ExecSpec(mode="chunked", chunk_size=chunk_size),
+        rounds=rounds,
     )
 
 
@@ -184,6 +205,7 @@ PRESETS = {
     "table3": table3,
     "table4_accuracy": table4_accuracy,
     "table4_wall": table4_wall,
+    "table4_population": table4_population,
     "table5": table5,
     "table6": table6,
     "fig_async": fig_async,

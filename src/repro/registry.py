@@ -274,7 +274,7 @@ register_engine("rounds", sync=True)
 register_engine("events", sync=True)
 register_engine("async", sync=False)
 
-for _m in ("loop", "cohort", "sharded"):
+for _m in ("loop", "cohort", "sharded", "chunked"):
     exec_modes.register(_m)
 
 # the paper's four image benchmarks (data/synthetic.DATASETS) + the noisier

@@ -1,0 +1,517 @@
+"""Population-plane lockdown: the equivalence/regression harness for the
+lazy client-state store, the chunked execution plane, and the incremental
+scheduler.
+
+Four families of guarantees:
+
+* chunked == cohort BIT-FOR-BIT: a cohort run and a chunked run of the same
+  spec produce identical params, aux heads, accuracies, assignments,
+  scheduler observations, and uplink bytes — for DTFL and FedAvg, under the
+  rounds and events engines, and with the stateful topk+EF codec.
+* lazy-store properties: a never-sampled client allocates no state; a
+  resampled client's state round-trips the checkpoint envelope
+  bit-deterministically; compaction after churn never drops a live
+  client's EF residual. (Hypothesis variants run where the library is
+  installed — tests/hyputil.py — with deterministic fallbacks always on.)
+* incremental scheduler == dense rebuild: the cached estimate-matrix rows
+  equal an independent from-scratch Eq.-5 computation, assignments are
+  exact, and ``_row_recomputes`` tracks observations, not registry size.
+* O(population) hotspot regressions: int-pool sampling is stream-identical
+  to the arange it replaced, and per-round sampling cost is O(sample).
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+from hyputil import given, settings, st
+
+from repro import checkpoint as ckpt
+from repro import optim
+from repro.api import ExperimentSpec, SpecError
+from repro.configs.resnet_cifar import RESNET_MICRO
+from repro.core.scheduler import DynamicTierScheduler, TierProfile
+from repro.data.pipeline import ClientDataset, make_eval_batch
+from repro.data.synthetic import ClassImageTask
+from repro.fed import (ClientStore, DTFLTrainer, LazyHeteroEnv, ResNetAdapter,
+                       SimClient)
+from repro.fed import engine
+from repro.fed.execplan import ExecPlan
+from repro.fed.population import cid_rng
+
+BASE = {
+    "model": {"arch": "resnet-micro", "full_size": True, "cost_model": "self"},
+    "data": {"clients": 5, "samples": 320, "batch_size": 8, "iid": True},
+    "env": {"switch_every": 0},
+    "rounds": 2,
+}
+
+
+def _run(overrides):
+    spec = ExperimentSpec.from_dict({**BASE, **overrides})
+    fed = spec.build()
+    return fed, fed.run()
+
+
+def _leaves_equal(a, b, what=""):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb), what
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=what)
+
+
+def _assert_same_run(fa, la, fb, lb):
+    """Bit-for-bit run equality: params, aux, logs, scheduler state, EF."""
+    ta, tb = fa.trainer, fb.trainer
+    _leaves_equal(ta.params, tb.params, "params")
+    for tier in getattr(ta, "aux", {}):
+        _leaves_equal(ta.aux[tier], tb.aux[tier], f"aux[{tier}]")
+    assert [l.acc for l in la] == [l.acc for l in lb]
+    assert [l.clock for l in la] == [l.clock for l in lb]
+    assert [l.assignment for l in la] == [l.assignment for l in lb]
+    assert [l.uplink_bytes for l in la] == [l.uplink_bytes for l in lb]
+    if hasattr(ta, "sched") and hasattr(ta.sched, "clients"):
+        ia, ib = (ta.sched.clients.touched_items(),
+                  tb.sched.clients.touched_items())
+        assert [k for k, _ in ia] == [k for k, _ in ib]
+        for (_, ca), (_, cb) in zip(ia, ib):
+            assert (ca.tier, ca.nu, ca.n_batches, ca.last_obs_tier) == (
+                cb.tier, cb.nu, cb.n_batches, cb.last_obs_tier)
+            assert set(ca.ema) == set(cb.ema)
+            for m in ca.ema:
+                assert ca.ema[m].value == cb.ema[m].value
+    efa, efb = getattr(ta, "_ef", {}), getattr(tb, "_ef", {})
+    assert set(efa) == set(efb)
+    for cid in efa:
+        assert efa[cid]["tier"] == efb[cid]["tier"]
+        _leaves_equal(efa[cid]["c"], efb[cid]["c"], f"ef[{cid}].c")
+        _leaves_equal(efa[cid]["a"], efb[cid]["a"], f"ef[{cid}].a")
+
+
+# ---------------------------------------------------------------------------
+# chunked == cohort bit-equality (the tentpole's execution contract)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def cohort_dtfl():
+    return _run({"exec": {"mode": "cohort"}})
+
+
+# 1 (one client per program call), 3 (ragged: 5 clients pad to 6), and 5
+# (chunk == whole cohort) cover the degenerate, padded, and identity chunkings
+@pytest.mark.parametrize("chunk", [1, 3, 5])
+def test_chunked_equals_cohort_dtfl(cohort_dtfl, chunk):
+    fa, la = _run({"exec": {"mode": "chunked", "chunk_size": chunk}})
+    _assert_same_run(fa, la, *cohort_dtfl)
+
+
+@pytest.mark.parametrize("chunk", [1, 3])
+def test_chunked_equals_cohort_fedavg(chunk):
+    fa, la = _run({"trainer": {"method": "fedavg"},
+                   "exec": {"mode": "chunked", "chunk_size": chunk}})
+    fb, lb = _run({"trainer": {"method": "fedavg"},
+                   "exec": {"mode": "cohort"}})
+    _assert_same_run(fa, la, fb, lb)
+
+
+def test_chunked_equals_cohort_events_engine():
+    fa, la = _run({"engine": {"name": "events"},
+                   "exec": {"mode": "chunked", "chunk_size": 2}})
+    fb, lb = _run({"engine": {"name": "events"}, "exec": {"mode": "cohort"}})
+    _assert_same_run(fa, la, fb, lb)
+
+
+def test_chunked_equals_cohort_topk_ef_codec():
+    """The stateful codec path: per-client error-feedback residuals must be
+    gathered/scattered per chunk without perturbing the compressed stream."""
+    fa, la = _run({"codec": {"name": "topk0.25"},
+                   "exec": {"mode": "chunked", "chunk_size": 3}})
+    fb, lb = _run({"codec": {"name": "topk0.25"}, "exec": {"mode": "cohort"}})
+    assert fa.trainer._ef, "topk run recorded no EF residuals"
+    _assert_same_run(fa, la, fb, lb)
+
+
+def test_chunked_equals_cohort_population_rounds_vs_events():
+    """Population mode composes with both sync engines: same registry, same
+    sample_size, chunked — the events engine (no churn) must reproduce the
+    scalar-clock loop bit-for-bit, and both stay O(sample)."""
+    ov = {"data": {"population": 40, "samples": 24, "batch_size": 8,
+                   "iid": True},
+          "trainer": {"sample_size": 4},
+          "exec": {"mode": "chunked", "chunk_size": 2}}
+    fa, la = _run({**ov, "engine": {"name": "rounds"}})
+    fb, lb = _run({**ov, "engine": {"name": "events"}})
+    _assert_same_run(fa, la, fb, lb)
+    assert fa.trainer.clients.n_touched <= 2 * 4 + 1
+
+
+# ---------------------------------------------------------------------------
+# lazy client-state store properties
+# ---------------------------------------------------------------------------
+
+@given(touch=st.lists(st.integers(0, 199), max_size=40),
+       n=st.integers(200, 5000))
+@settings(max_examples=30, deadline=None)
+def test_store_materializes_exactly_touched(touch, n):
+    built = []
+    store = ClientStore(n, lambda cid: built.append(cid) or ("client", cid))
+    for cid in touch:
+        assert store[cid] == ("client", cid)
+    assert store.touched() == sorted(set(touch))
+    assert store.n_touched == len(set(touch)) == len(built)
+
+
+def test_store_materializes_exactly_touched_deterministic():
+    built = []
+    store = ClientStore(10_000, lambda cid: built.append(cid) or ("c", cid))
+    for cid in (3, 9999, 3, 0, 512):
+        assert store[cid] == ("c", cid)
+    assert store.touched() == [0, 3, 512, 9999]
+    assert store.n_touched == len(built) == 4  # repeat access hits the cache
+    with pytest.raises(IndexError):
+        store[10_000]
+    store.compact([3, 512])
+    assert store.touched() == [3, 512]
+    # a compacted client rebuilds identically from the factory
+    assert store[9999] == ("c", 9999)
+
+
+def test_never_sampled_client_allocates_no_state():
+    """End-to-end: after a population-mode run, materialized client/
+    scheduler/env state covers only the sampled participants (plus client 0,
+    which the trainer constructor reads for its batch size)."""
+    fed, logs = _run({"data": {"population": 300, "samples": 24,
+                               "batch_size": 8, "iid": True},
+                      "trainer": {"sample_size": 5},
+                      "exec": {"mode": "chunked", "chunk_size": 5}})
+    tr = fed.trainer
+    sampled = set().union(*(l.assignment.keys() for l in logs))
+    assert set(tr.clients.touched()) <= sampled | {0}
+    assert set(tr.sched.clients.touched()) <= sampled | {0}
+    assert tr.clients.n_touched < 300 / 4  # nowhere near the registry
+
+
+def _pop_setup(n=40, per=24, bs=8):
+    task = ClassImageTask(n_classes=10, image_size=RESNET_MICRO.image_size)
+
+    def factory(cid):
+        labels = cid_rng(0, 21, cid).integers(0, 10, per)
+        return SimClient(
+            cid, ClientDataset(task, labels, np.arange(per), bs, seed=cid + 1),
+            None)
+
+    return (ResNetAdapter(RESNET_MICRO, cost_cfg=None),
+            ClientStore(n, factory), make_eval_batch(task, 32))
+
+
+def _pop_trainer(adapter, clients):
+    # switch_every=2 exercises the lazy env's switch log across the
+    # checkpoint boundary
+    return DTFLTrainer(adapter, clients,
+                       LazyHeteroEnv(len(clients), switch_every=2, seed=0),
+                       optim.adam(1e-3), seed=0, exec_plan=ExecPlan.chunked(2))
+
+
+@pytest.mark.parametrize("eng", ["rounds", "events"])
+def test_resampled_state_roundtrips_checkpoint(tmp_path, eng):
+    """Run 4 population-mode rounds straight == run 2, checkpoint, resume in
+    a fresh trainer, run 2 more — params, scheduler EMA history, and lazy-env
+    profiles all bit-for-bit (clients resampled after the resume hit their
+    pre-checkpoint state)."""
+    p = os.path.join(str(tmp_path), "state.npz")
+    adapter, store, ev = _pop_setup()
+    straight = _pop_trainer(adapter, store)
+    straight.run(4, ev, sample_size=3, engine=eng)
+
+    first = _pop_trainer(*_pop_setup()[:2])
+    first.run(2, ev, sample_size=3, engine=eng,
+              checkpoint_path=p, checkpoint_every=2)
+    env = ckpt.load(p)
+    # the envelope is SPARSE: it carries the touched clients, not the registry
+    n_saved = len(np.asarray(env["trainer"]["sched"]["cids"]).reshape(-1))
+    assert n_saved == first.sched.clients.n_touched < 40
+    assert "lazy" in env["trainer"]["env"]
+
+    resumed = _pop_trainer(*_pop_setup()[:2])
+    resumed.run(4, ev, sample_size=3, engine=eng, resume=env)
+
+    _leaves_equal(straight.params, resumed.params, "params")
+    ia, ib = (straight.sched.clients.touched_items(),
+              resumed.sched.clients.touched_items())
+    assert [k for k, _ in ia] == [k for k, _ in ib]
+    for (_, ca), (_, cb) in zip(ia, ib):
+        assert ca.tier == cb.tier and ca.last_obs_tier == cb.last_obs_tier
+        for m in ca.ema:
+            assert ca.ema[m].value == cb.ema[m].value
+    for cid in straight.sched.clients.touched():
+        assert (straight.env.profile_idx(cid) == resumed.env.profile_idx(cid))
+
+
+def test_lazy_env_rejects_dense_envelope():
+    env = LazyHeteroEnv(10, seed=0)
+    with pytest.raises(ValueError, match="dense"):
+        env.load_state({"assignment": np.zeros(10, np.int64)})
+
+
+def test_lazy_env_resolution_is_order_independent():
+    """A profile resolved eagerly (cached before switches) equals one
+    resolved lazily after the full switch log — cache invalidation cannot
+    change the draw."""
+    a = LazyHeteroEnv(1000, switch_every=2, switch_frac=0.5, seed=7)
+    b = LazyHeteroEnv(1000, switch_every=2, switch_frac=0.5, seed=7)
+    cids = [0, 1, 17, 999]
+    for cid in cids:
+        a.profile_idx(cid)          # eager: populate the cache early
+    for r in range(1, 9):
+        a.maybe_switch(r)
+        a.maybe_switch(r)           # idempotent per round
+        b.maybe_switch(r)
+        for cid in cids:
+            a.profile_idx(cid)
+    assert [a.profile_idx(c) for c in cids] == [b.profile_idx(c) for c in cids]
+    # an override pins the profile from its log position onward
+    b.set_profile(17, 2)
+    c = LazyHeteroEnv(1000, switch_every=2, switch_frac=0.5, seed=7)
+    c.load_state(b.save_state())
+    assert [c.profile_idx(k) for k in cids] == [b.profile_idx(k) for k in cids]
+
+
+@given(keep_frac=st.floats(0.1, 0.9), seed=st.integers(0, 20))
+@settings(max_examples=15, deadline=None)
+def test_compaction_never_drops_live_state(keep_frac, seed):
+    """Property variant (store + scheduler level): compacting to any keep
+    set preserves every kept client's state exactly and drops the rest."""
+    rng = np.random.default_rng(seed)
+    store = ClientStore(5000, lambda cid: ("c", cid))
+    s = DynamicTierScheduler(_make_profile(seed % 5), n_clients=5000)
+    touched = sorted(set(rng.integers(0, 5000, 60).tolist()))
+    for k in touched:
+        store[k]
+        s.observe(k, tier=0, total_client_time=1.0 + k % 5, nu=1e6,
+                  n_batches=2)
+    keep = sorted(k for k in touched if rng.random() < keep_frac)
+    vals = {k: s.clients[k].ema[0].value for k in keep}
+    store.compact(keep)
+    s.compact(keep)
+    assert store.touched() == keep == s.clients.touched()
+    for k in keep:
+        assert s.clients[k].ema[0].value == vals[k]
+
+
+def test_compaction_never_drops_live_ef_deterministic():
+    """After churn compaction, every surviving client's EF residual (and
+    scheduler history) is untouched; departed clients' state is gone."""
+    fed, _ = _run({"data": {"population": 40, "samples": 24, "batch_size": 8,
+                            "iid": True},
+                   "trainer": {"sample_size": 6},
+                   "codec": {"name": "topk0.25"},
+                   "exec": {"mode": "chunked", "chunk_size": 3}})
+    tr = fed.trainer
+    assert tr._ef, "no EF residuals recorded"
+    with_ef = sorted(tr._ef)
+    live, gone = with_ef[::2], with_ef[1::2]
+    snapshot = {cid: jax.tree.map(np.copy, tr._ef[cid]["c"]) for cid in live}
+    tr.compact(live)
+    assert sorted(tr._ef) == sorted(live)
+    for cid in live:
+        _leaves_equal(tr._ef[cid]["c"], snapshot[cid], f"ef[{cid}]")
+        assert tr.sched.clients.is_touched(cid)
+    for cid in gone:
+        assert cid not in tr._ef
+        assert not tr.sched.clients.is_touched(cid)
+        assert cid not in tr.clients.touched()
+
+
+# ---------------------------------------------------------------------------
+# incremental scheduler == dense rebuild
+# ---------------------------------------------------------------------------
+
+def _make_profile(M=7, seed=0):
+    rng = np.random.default_rng(seed)
+    return TierProfile(
+        t_client_ref=np.sort(rng.uniform(1.0, 10.0, M)),
+        t_server_ref=np.sort(rng.uniform(0.5, 5.0, M))[::-1].copy(),
+        d_size=np.sort(rng.uniform(1e5, 1e7, M))[::-1].copy(),
+    )
+
+
+def _dense_reference(s, ks):
+    """Independent from-scratch Eq.-5 (K, M) rebuild — the dense computation
+    the incremental cache replaced, re-derived here so the test does not
+    share code with the implementation."""
+    prof = s.profile
+    out = np.empty((len(ks), prof.n_tiers))
+    for i, k in enumerate(ks):
+        if s.clients.is_touched(k):
+            st_ = s.clients[k]
+            nu, nb, m0 = float(st_.nu), float(st_.n_batches), st_.last_obs_tier
+            ema = st_.ema[m0].value if m0 is not None else None
+        else:
+            nu, nb, m0, ema = 1e6, 1.0, None, None
+        t_com = (prof.z_bytes * nb + prof.param_bytes) / nu
+        t_srv = prof.t_server_ref * nb
+        t_cli = (prof.t_client_ref * nb if m0 is None
+                 else prof.t_client_ref / prof.t_client_ref[m0] * ema)
+        out[i] = np.maximum(t_cli + t_com, t_srv + t_com)
+    return out
+
+
+def _reference_assign(s, dense, ks):
+    sel = np.array(s.allowed)
+    est = dense[:, sel]
+    t_max = est.min(axis=1).max()
+    feasible = est <= t_max + 1e-12
+    assign = {}
+    for i, k in enumerate(ks):
+        ok = np.flatnonzero(feasible[i])
+        assign[k] = int(sel[ok.max()]) if len(ok) else int(sel[est[i].argmin()])
+    return assign
+
+
+def _synthetic_rounds(s, n_rounds, sample, lo_cid=0, hi_cid=1000, seed=4):
+    rng = np.random.default_rng(seed)
+    for r in range(n_rounds):
+        ks = sorted(rng.choice(np.arange(lo_cid, hi_cid), sample,
+                               replace=False).tolist())
+        s.schedule(ks)
+        for k in ks:
+            s.observe(k, tier=s.clients[k].tier,
+                      total_client_time=1.0 + (k % 7) + 0.1 * r,
+                      nu=1e6 * (1 + k % 3), n_batches=2 + k % 4)
+
+
+def test_incremental_matrix_equals_dense_rebuild():
+    s = DynamicTierScheduler(_make_profile(), n_clients=10_000)
+    _synthetic_rounds(s, n_rounds=6, sample=32)
+    rng = np.random.default_rng(9)
+    # mix of observed, schedule-touched, and never-seen clients
+    ks = sorted(set(s.clients.touched()[:40])
+                | set(rng.integers(0, 10_000, 20).tolist()))
+    dense = _dense_reference(s, ks)
+    np.testing.assert_allclose(s.estimate_matrix(ks), dense, rtol=1e-12)
+    assert s.schedule(ks) == _reference_assign(s, dense, ks)
+
+
+def test_row_recomputes_track_observations_not_registry():
+    """The micro-benchmark claim: the identical observation/schedule sequence
+    costs the identical number of row rebuilds on a 10^3- and a 10^6-client
+    registry — update cost is O(observed), never O(population)."""
+    counts = {}
+    for n in (1_000, 1_000_000):
+        s = DynamicTierScheduler(_make_profile(), n_clients=n)
+        _synthetic_rounds(s, n_rounds=5, sample=16)
+        s.estimate_matrix(list(range(0, 1000, 100)))
+        counts[n] = s._row_recomputes
+    assert counts[1_000] == counts[1_000_000]
+    # ceiling: one rebuild per (participant x round) + the final estimate
+    # call + the shared default row — NOT a function of n
+    assert counts[1_000_000] <= 5 * 16 * 2 + 10 + 1
+
+
+def test_schedule_only_touches_participants():
+    s = DynamicTierScheduler(_make_profile(), n_clients=500_000)
+    s.schedule([3, 77, 400_000])
+    assert s.clients.touched() == [3, 77, 400_000]
+    assert len(s._rows) <= 3
+
+
+# ---------------------------------------------------------------------------
+# O(population) hotspot regressions (fed/engine.py sampling)
+# ---------------------------------------------------------------------------
+
+def test_int_pool_sampling_stream_identical_to_arange():
+    """run_events' churn-free pool is now the population SIZE; the rng must
+    consume the identical stream as the arange it replaced (golden runs)."""
+    a, b = np.random.default_rng(0), np.random.default_rng(0)
+    for k in (1, 5, 17, 256):
+        np.testing.assert_array_equal(
+            a.choice(10_000, k, replace=False),
+            b.choice(np.arange(10_000), k, replace=False))
+
+
+def test_round_sample_size():
+    f = engine._round_sample_size
+    assert f(100, 0.25, None) == 25          # legacy fractional sizing
+    assert f(3, 0.1, None) == 1              # floor of one participant
+    assert f(1_000_000, 1.0, 512) == 512     # absolute population sampling
+    assert f(10, 1.0, 512) == 10             # capped at the registry
+    with pytest.raises(ValueError, match="sample_size"):
+        f(100, 1.0, 0)
+
+
+# ---------------------------------------------------------------------------
+# spec plumbing: validation + program identity
+# ---------------------------------------------------------------------------
+
+def test_spec_validation():
+    with pytest.raises(SpecError):
+        ExperimentSpec.from_dict({**BASE, "exec": {"mode": "cohort",
+                                                   "chunk_size": 4}})
+    with pytest.raises(SpecError):
+        ExperimentSpec.from_dict({**BASE, "exec": {"mode": "chunked",
+                                                   "chunk_size": 0}})
+    with pytest.raises(SpecError):
+        ExperimentSpec.from_dict({
+            **BASE, "data": {"population": 100, "samples": 24},
+            "engine": {"name": "async"}})
+    with pytest.raises(SpecError):
+        ExperimentSpec.from_dict({**BASE, "trainer": {"sample_size": 4},
+                                  "engine": {"name": "async"}})
+    spec = ExperimentSpec.from_dict({**BASE, "exec": {"mode": "chunked"}})
+    assert spec.exec.chunk_size is None      # plan default (16) applies late
+    assert ExecPlan.chunked().chunk_size == 16
+    with pytest.raises(ValueError, match="chunk_size"):
+        ExecPlan(mode="cohort", chunk_size=4)
+
+
+def test_chunk_size_enters_program_key():
+    k1 = ExperimentSpec.from_dict(
+        {**BASE, "exec": {"mode": "chunked", "chunk_size": 2}}).program_key()
+    k2 = ExperimentSpec.from_dict(
+        {**BASE, "exec": {"mode": "chunked", "chunk_size": 4}}).program_key()
+    k3 = ExperimentSpec.from_dict({**BASE, "exec": {"mode": "cohort"}}
+                                  ).program_key()
+    assert len({k1, k2, k3}) == 3
+    # population/sample_size are data-plane knobs: same compiled programs
+    ka = ExperimentSpec.from_dict({
+        **BASE, "data": {"population": 100, "samples": 24},
+        "trainer": {"sample_size": 4}}).program_key()
+    kb = ExperimentSpec.from_dict({
+        **BASE, "data": {"population": 5000, "samples": 24},
+        "trainer": {"sample_size": 8}}).program_key()
+    assert ka == kb
+
+
+def test_async_rejects_sample_size_at_run():
+    adapter, store, ev = _pop_setup(n=8)
+    tr = DTFLTrainer(adapter, store, LazyHeteroEnv(8, switch_every=0, seed=0),
+                     optim.adam(1e-3), seed=0)
+    with pytest.raises(ValueError, match="async"):
+        tr.run(2, ev, engine="async", sample_size=4)
+
+
+# ---------------------------------------------------------------------------
+# bench regression gate (benchmarks/run.py --check)
+# ---------------------------------------------------------------------------
+
+def test_bench_check_gate(tmp_path, monkeypatch, capsys):
+    bench_run = pytest.importorskip("benchmarks.run")
+    fresh = {"10/loop": 1.0, "10/cohort": 0.4, "pop100000/s512/c64": 3.0}
+    monkeypatch.setattr(bench_run, "_fresh_walls", lambda: dict(fresh))
+
+    base = os.path.join(str(tmp_path), "BENCH_table4.json")
+    bench_run._write_baseline(base)
+    out = os.path.join(str(tmp_path), "fresh.json")
+    assert bench_run._check_baseline(base, out=out) == 0
+    assert os.path.exists(out)
+
+    # >1.5x on any row fails; a baseline row missing from the fresh run
+    # (device-dependent sharded_dN) is skipped, not failed
+    monkeypatch.setattr(bench_run, "_fresh_walls",
+                        lambda: {**fresh, "10/loop": 1.6})
+    assert bench_run._check_baseline(base) == 1
+    monkeypatch.setattr(
+        bench_run, "_fresh_walls",
+        lambda: {k: v for k, v in fresh.items() if k != "10/cohort"})
+    assert bench_run._check_baseline(base) == 0
