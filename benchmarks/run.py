@@ -3,12 +3,16 @@
 #
 #   python benchmarks/run.py --only table4_scaling,roofline
 #
-# It is also the wall-time regression gate: ``--check BENCH_table4.json``
-# re-times only table4_scaling's wall rows (loop/cohort/sharded/chunked
-# planes + the 100k-population regime) and exits non-zero if any is more
-# than TOLERANCE x slower than the committed baseline;
-# ``--write-baseline BENCH_table4.json`` refreshes the baseline from a
-# fresh run on the current machine.
+# It is also the regression gate. ``--check <BENCH_*.json>`` dispatches on
+# the baseline's ``meta.suite``:
+#   * table4_scaling — re-times the wall rows (loop/cohort/sharded/chunked
+#     planes + the 100k-population regime) and exits non-zero if any is
+#     more than TOLERANCE x slower than the committed baseline;
+#   * table3_baselines — re-runs the dtfl vs dtfl_pairing clock comparison
+#     and fails if either simulated clock regressed past tolerance or if
+#     pairing stopped beating plain DTFL (the mutual-offload claim).
+# ``--write-baseline <BENCH_*.json>`` refreshes a baseline from a fresh run
+# on the current machine (suite inferred from the filename).
 from __future__ import annotations
 
 import argparse
@@ -59,9 +63,56 @@ def _fresh_walls() -> dict[str, float]:
     return walls
 
 
+def _fresh_table3(meta: dict) -> dict[str, float]:
+    """Re-run the gate-scoped slice of table3_baselines: dtfl vs
+    dtfl_pairing on the IID split only, keyed ``<iid|noniid>/<method>``.
+    Clocks are SIMULATED time — deterministic given the seed — so the gate
+    is cheap enough for CI yet pins the mutual-offload speedup claim."""
+    from benchmarks import table3_baselines
+
+    rows = table3_baselines.main(
+        emit_fn=lambda _line: None,
+        rounds=int(meta.get("rounds", 10)),
+        target=float(meta.get("target", 0.55)),
+        methods=tuple(meta.get("methods", ("dtfl", "dtfl_pairing"))),
+        iids=(True,))
+    return {f"{r[1]}/{r[2]}": float(r[3]) for r in rows
+            if r[2] in ("dtfl", "dtfl_pairing")}
+
+
+def _check_table3(base: dict, out: str | None = None) -> int:
+    tol = base.get("meta", {}).get("tolerance", TOLERANCE)
+    fresh = _fresh_table3(base.get("meta", {}))
+    if out:
+        with open(out, "w") as f:
+            json.dump({"meta": {"suite": "table3_baselines", "fresh": True},
+                       "clocks": fresh}, f, indent=1, sort_keys=True)
+            f.write("\n")
+    failures = 0
+    for key, ref in sorted(base["clocks"].items()):
+        got = fresh.get(key)
+        if got is None:
+            print(f"check: {key}: not measured — skipped", file=sys.stderr)
+            continue
+        verdict = "ok" if got <= tol * ref else "REGRESSION"
+        print(f"check: {key}: clock {got:.0f}s vs baseline {ref:.0f}s "
+              f"(limit {tol:.1f}x) {verdict}")
+        failures += verdict != "ok"
+    # the headline invariant: mutual offload must beat plain DTFL
+    dt, pair = fresh.get("iid/dtfl"), fresh.get("iid/dtfl_pairing")
+    if dt is not None and pair is not None:
+        verdict = "ok" if pair < dt else "REGRESSION"
+        print(f"check: iid/dtfl_pairing < iid/dtfl: {pair:.0f}s vs "
+              f"{dt:.0f}s {verdict}")
+        failures += verdict != "ok"
+    return failures
+
+
 def _check_baseline(path: str, out: str | None = None) -> int:
     with open(path) as f:
         base = json.load(f)
+    if base.get("meta", {}).get("suite") == "table3_baselines":
+        return _check_table3(base, out=out)
     tol = base.get("meta", {}).get("tolerance", TOLERANCE)
     fresh = _fresh_walls()
     if out:  # CI uploads the fresh measurement next to the verdict
@@ -89,6 +140,17 @@ def _check_baseline(path: str, out: str | None = None) -> int:
 
 
 def _write_baseline(path: str) -> None:
+    if "table3" in path.rsplit("/", 1)[-1]:
+        meta = {"suite": "table3_baselines", "tolerance": TOLERANCE,
+                "rounds": 10, "target": 0.55,
+                "methods": ["dtfl", "dtfl_pairing"]}
+        clocks = _fresh_table3(meta)
+        with open(path, "w") as f:
+            json.dump({"meta": meta, "clocks": clocks}, f, indent=1,
+                      sort_keys=True)
+            f.write("\n")
+        print(f"wrote {len(clocks)} clock baselines to {path}")
+        return
     walls = _fresh_walls()
     with open(path, "w") as f:
         json.dump({"meta": {"suite": "table4_scaling",
@@ -103,13 +165,16 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated suite subset (e.g. "
                          "table4_scaling,roofline); default: all")
-    ap.add_argument("--check", default=None, metavar="BENCH_table4.json",
-                    help="regression gate: re-time the table4 wall rows and "
-                         f"fail if any exceeds {TOLERANCE}x its baseline")
+    ap.add_argument("--check", default=None, metavar="BENCH_*.json",
+                    help="regression gate: re-measure the baseline's suite "
+                         "(meta.suite: table4_scaling walls or "
+                         "table3_baselines clocks) and fail if any row "
+                         f"exceeds {TOLERANCE}x its baseline (table3 also "
+                         "fails if dtfl_pairing stops beating dtfl)")
     ap.add_argument("--write-baseline", default=None,
-                    metavar="BENCH_table4.json",
-                    help="re-time the table4 wall rows and write them as "
-                         "the new baseline")
+                    metavar="BENCH_*.json",
+                    help="re-measure and write a new baseline (suite "
+                         "inferred from the filename: table3 vs table4)")
     ap.add_argument("--out", default=None,
                     help="with --check: also write the fresh wall "
                          "measurements here (the CI artifact)")

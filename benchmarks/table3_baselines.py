@@ -10,34 +10,56 @@ keeps its sequential two-phase KD protocol (per-batch teacher state); FedAT
 runs asynchronously on the event engine (per-tier pacing, staleness-weighted
 merges) with its clock read from the virtual event clock.
 
+``dtfl_pairing`` is DTFL under the mutual-offload topology (PairingScheduler
++ ``topology=pairing``): fast clients host slow clients' far halves, so the
+server's capacity is shared over fewer participants and slow clients' far
+halves run at peer speed. Same data, model, and heterogeneity profile —
+only scheduling and time accounting differ.
+
 CSV rows:
   table3,<iid|noniid>,<method>,<sim_clock_s>,<rounds>,<acc>,<reached|budget>
   table3,<iid|noniid>,dtfl_vs_fedavg_speedup,<x>,,,
+  table3,<iid|noniid>,dtfl_pairing_vs_dtfl_speedup,<x>,,,
 """
 from __future__ import annotations
 
 from repro import presets
 from benchmarks.common import run_spec
 
-METHODS = ("dtfl", "fedavg", "fedyogi", "splitfed", "fedgkt", "fedat")
+METHODS = ("dtfl", "dtfl_pairing", "fedavg", "fedyogi", "splitfed", "fedgkt",
+           "fedat")
 
 
-def main(emit_fn=print, rounds=10, target=0.55):
+def _spec(method, *, iid, rounds, target):
+    if method == "dtfl_pairing":
+        return presets.table3("dtfl", iid=iid, rounds=rounds, target=target,
+                              topology="pairing")
+    return presets.table3(method, iid=iid, rounds=rounds, target=target)
+
+
+def main(emit_fn=print, rounds=10, target=0.55, methods=METHODS,
+         iids=(True, False)):
     out = []
-    for iid in (True, False):
-        for method in METHODS:
-            logs, _ = run_spec(presets.table3(method, iid=iid, rounds=rounds,
-                                              target=target))
+    for iid in iids:
+        for method in methods:
+            logs, _ = run_spec(_spec(method, iid=iid, rounds=rounds,
+                                     target=target))
             reached = logs[-1].acc >= target
             out.append((
                 "table3", "iid" if iid else "noniid", method,
                 round(logs[-1].clock), len(logs), round(logs[-1].acc, 3),
                 "reached" if reached else "budget",
             ))
-    dt = {r[1]: r[3] for r in out if r[2] == "dtfl"}
-    fa = {r[1]: r[3] for r in out if r[2] == "fedavg"}
-    for k in dt:
-        out.append(("table3", k, "dtfl_vs_fedavg_speedup", round(fa[k] / max(dt[k], 1), 2), "", "", ""))
+    clocks = {(r[1], r[2]): r[3] for r in out}
+    for num, den, row in (("fedavg", "dtfl", "dtfl_vs_fedavg_speedup"),
+                          ("dtfl", "dtfl_pairing",
+                           "dtfl_pairing_vs_dtfl_speedup")):
+        for iid in iids:
+            k = "iid" if iid else "noniid"
+            if (k, num) in clocks and (k, den) in clocks:
+                out.append(("table3", k, row,
+                            round(clocks[k, num] / max(clocks[k, den], 1), 2),
+                            "", "", ""))
     for r in out:
         emit_fn(",".join(str(x) for x in r))
     return out

@@ -161,13 +161,17 @@ class EnvSpec:
 @dataclass(frozen=True)
 class TrainerSpec:
     """Algorithm + its local-training knobs. ``scheduler`` is DTFL's tier
-    scheduler spec (``dynamic`` | ``dynamic:<M>`` | a fixed tier index) and
-    is rejected for methods that have no tier scheduler. ``options`` passes
-    extra registered-trainer constructor kwargs (e.g. fedyogi's
-    ``server_lr``) — keys must be identifiers."""
+    scheduler spec (``dynamic`` | ``dynamic:<M>`` | a fixed tier index |
+    ``pairing[:greedy]``) and is rejected for methods that have no tier
+    scheduler. ``topology`` picks the offload topology (``server`` |
+    ``pairing``, core/topology.py); ``scheduler=pairing`` and
+    ``topology=pairing`` imply each other and are kept coherent here.
+    ``options`` passes extra registered-trainer constructor kwargs (e.g.
+    fedyogi's ``server_lr``) — keys must be identifiers."""
 
     method: str = "dtfl"
     scheduler: str | int = "dynamic"
+    topology: str = "server"
     lr: float = 1e-3
     local_epochs: int = 1
     dcor_alpha: float = 0.0
@@ -185,6 +189,19 @@ class TrainerSpec:
         object.__setattr__(
             self, "scheduler",
             int(canon) if canon.lstrip("-").isdigit() else canon)
+        topo = _validated(registry.topologies, self.topology)
+        pairing_sched = (isinstance(self.scheduler, str)
+                         and self.scheduler.startswith("pairing"))
+        if topo == "pairing" and not pairing_sched:
+            if self.scheduler != "dynamic":
+                raise SpecError(
+                    f"trainer.topology='pairing' requires "
+                    f"trainer.scheduler='pairing' (or 'pairing:greedy'), got "
+                    f"scheduler={self.scheduler!r}")
+            object.__setattr__(self, "scheduler", "pairing")
+        elif pairing_sched:
+            topo = "pairing"
+        object.__setattr__(self, "topology", topo)
         _positive("trainer.lr", self.lr, minimum=0)
         _positive("trainer.local_epochs", self.local_epochs)
         if not isinstance(self.options, dict) or not all(
@@ -588,6 +605,7 @@ class Federation:
         kw = dict(spec.trainer.options)
         if registry.trainers.meta(spec.trainer.method).get("scheduler_aware"):
             kw["scheduler"] = spec.trainer.scheduler
+            kw["topology"] = spec.trainer.topology
         kw["exec_plan"] = ExecPlan.from_flags(spec.exec.mode,
                                               devices=spec.exec.devices,
                                               chunk_size=spec.exec.chunk_size)

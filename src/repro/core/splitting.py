@@ -1,0 +1,96 @@
+"""Arch-agnostic parameter-tree splitting at an arbitrary boundary.
+
+This is the single home for near-half / far-half parameter splitting.  A
+:class:`SplitScheme` describes, per architecture, how a full parameter tree
+decomposes into
+
+* a run of repeated blocks under ``blocks_key`` that an integer boundary
+  slices into a near (input-adjacent) and a far (output-adjacent) run, and
+* fixed keys that always travel with one half (``near_keys`` input-adjacent,
+  ``far_keys`` head-side).
+
+Two layouts exist in this repo: the transformer stacks block parameters on a
+leading layer axis (``stacked=True`` — the slice is a tree ``a[:b]``), while
+the ResNet keeps a Python list of per-block trees (``stacked=False`` — the
+slice is a list slice).  Both directions are lossless: ``merge_params``
+inverts ``split_params`` exactly, which is what makes cross-tier FedAvg
+aggregation exact.
+
+Policy (which boundary a tier maps to) stays with the callers:
+``core/tiering.py`` owns the paper's module→boundary table for transformers,
+``models/resnet.py`` owns ``n_blocks_in_modules`` for the ResNet; both route
+their mechanics through here.  The offload *topology* (who executes the far
+half — server or a paired peer) is orthogonal and lives in
+``core/topology.py``; the trees produced here are host-agnostic.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+Params = dict
+
+
+@dataclass(frozen=True)
+class SplitScheme:
+    """How one architecture's parameter tree splits at a block boundary."""
+
+    stacked: bool                 # blocks on a leading layer axis vs a list
+    near_keys: tuple[str, ...]    # always input-side (client/guest)
+    far_keys: tuple[str, ...]     # always head-side (server/host)
+    blocks_key: str = "blocks"
+
+
+# The transformer stacks per-layer params (scan-style); embed/projection and
+# final-norm/head bookend the block run.
+TRANSFORMER = SplitScheme(
+    stacked=True,
+    near_keys=("embed", "front_proj", "enc_blocks", "enc_ln"),
+    far_keys=("final_ln", "lm_head"),
+)
+
+# The ResNet keeps a list of per-block trees; the stem is input-side, the
+# classifier head is far-side.
+RESNET = SplitScheme(stacked=False, near_keys=("stem",), far_keys=("fc",))
+
+
+def split_params(params: Params, boundary: int,
+                 scheme: SplitScheme) -> tuple[Params, Params]:
+    """Split ``params`` so the near half keeps blocks ``[:boundary]``.
+
+    Returns ``(near, far)``; fixed keys are copied to their scheme-assigned
+    half (skipped when absent, e.g. cost-model-only trees).
+    """
+    blocks = params[scheme.blocks_key]
+    if scheme.stacked:
+        near: Params = {scheme.blocks_key: jax.tree.map(lambda a: a[:boundary], blocks)}
+        far: Params = {scheme.blocks_key: jax.tree.map(lambda a: a[boundary:], blocks)}
+    else:
+        near = {scheme.blocks_key: blocks[:boundary]}
+        far = {scheme.blocks_key: blocks[boundary:]}
+    for k in scheme.near_keys:
+        if k in params:
+            near[k] = params[k]
+    for k in scheme.far_keys:
+        if k in params:
+            far[k] = params[k]
+    return near, far
+
+
+def merge_params(near: Params, far: Params, scheme: SplitScheme) -> Params:
+    """Inverse of :func:`split_params` — lossless for any boundary."""
+    if scheme.stacked:
+        blocks = jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0),
+                              near[scheme.blocks_key], far[scheme.blocks_key])
+    else:
+        blocks = list(near[scheme.blocks_key]) + list(far[scheme.blocks_key])
+    merged: Params = {scheme.blocks_key: blocks}
+    for k in scheme.near_keys:
+        if k in near:
+            merged[k] = near[k]
+    for k in scheme.far_keys:
+        if k in far:
+            merged[k] = far[k]
+    return merged

@@ -1,4 +1,4 @@
-"""Tier -> split-point mapping and parameter-tree splitting.
+"""Tier -> split-point mapping for the transformer port.
 
 The paper divides the global model into 8 "modules" (md1..md8); tier m's
 client-side model is modules md1..md_m (Table 10/11). For the transformer
@@ -6,20 +6,21 @@ port, modules are 8 ~equal groups of blocks; md8 (the paper's avgpool+fc)
 is the final norm + LM head, which always stays server-side, so tiers run
 1..7 (M <= n_modules - 1).
 
+This module owns the *policy* (tier -> block boundary); the split/merge
+*mechanics* live in :mod:`repro.core.splitting` (shared with the ResNet).
 Because block parameters are stacked on a leading layer axis, a tier split
 is a constant-time tree slice; merge is a concatenate. Split/merge is
 lossless (tested), which is what makes cross-tier FedAvg aggregation exact.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+from repro.core import splitting
 
 Params = dict
 
 # keys that always live client-side (input-adjacent) / server-side
-CLIENT_KEYS = ("embed", "front_proj", "enc_blocks", "enc_ln")
-SERVER_KEYS = ("final_ln", "lm_head")
+CLIENT_KEYS = splitting.TRANSFORMER.near_keys
+SERVER_KEYS = splitting.TRANSFORMER.far_keys
 
 
 def module_boundaries(n_layers: int, n_modules: int = 8) -> list[int]:
@@ -52,28 +53,9 @@ def split_layer(cfg, tier: int) -> int:
 
 def split_params(params: Params, cfg, tier: int) -> tuple[Params, Params]:
     """Split the full parameter tree at ``tier``. Returns (client, server)."""
-    s = split_layer(cfg, tier)
-    client: Params = {"blocks": jax.tree.map(lambda a: a[:s], params["blocks"])}
-    server: Params = {"blocks": jax.tree.map(lambda a: a[s:], params["blocks"])}
-    for k in CLIENT_KEYS:
-        if k in params:
-            client[k] = params[k]
-    for k in SERVER_KEYS:
-        if k in params:
-            server[k] = params[k]
-    return client, server
+    return splitting.split_params(params, split_layer(cfg, tier),
+                                  splitting.TRANSFORMER)
 
 
 def merge_params(client: Params, server: Params) -> Params:
-    merged: Params = {
-        "blocks": jax.tree.map(
-            lambda a, b: jnp.concatenate([a, b], axis=0), client["blocks"], server["blocks"]
-        )
-    }
-    for k in CLIENT_KEYS:
-        if k in client:
-            merged[k] = client[k]
-    for k in SERVER_KEYS:
-        if k in server:
-            merged[k] = server[k]
-    return merged
+    return splitting.merge_params(client, server, splitting.TRANSFORMER)

@@ -253,20 +253,31 @@ def simulate_client_times(
     server_flops: float = SERVER_FLOPS,
     n_sharing: int = 1,
     wires=None,
+    far_profile: ResourceProfile | None = None,
+    link_bytes_per_s: float | None = None,
 ) -> dict:
     """Ground-truth times for one client & tier (0-based tier index).
 
     ``n_sharing``: how many clients' server-side models the (finite) server
     trains concurrently this round — its capacity is divided among them.
     ``wires``: a ``codec.WireSizes`` pricing the wires under a compression
-    codec; None keeps the legacy identity accounting (same numbers)."""
+    codec; None keeps the legacy identity accounting (same numbers).
+    ``far_profile``: where the far half executes — None keeps the classic
+    DTFL server (shared ``server_flops``); a peer ``ResourceProfile`` prices
+    it at that device's full speed (pairing topology, core/topology.py).
+    ``link_bytes_per_s``: per-link wire bandwidth override (peer↔peer links
+    are bottlenecked by both ends); None uses the client's own uplink."""
     t_c = costs.client_flops[tier] * n_batches / profile.flops
     if wires is None:
         comm_bytes = costs.d_size(tier, n_batches) * n_batches
     else:
         comm_bytes = wires.z_bytes[tier] * n_batches + wires.param_bytes[tier]
-    t_com = comm_bytes / profile.bytes_per_s
-    t_s = costs.server_flops[tier] * n_batches / (server_flops / max(n_sharing, 1))
+    link = profile.bytes_per_s if link_bytes_per_s is None else link_bytes_per_s
+    t_com = comm_bytes / link
+    if far_profile is None:
+        t_s = costs.server_flops[tier] * n_batches / (server_flops / max(n_sharing, 1))
+    else:
+        t_s = costs.server_flops[tier] * n_batches / far_profile.flops
     return {
         "client": t_c,
         "comm": t_com,
@@ -300,13 +311,20 @@ def simulate_client_times_batch(
     server_flops: float = SERVER_FLOPS,
     n_sharing: int = 1,
     wires=None,
+    far_flops: np.ndarray | None = None,
+    link_bytes_per_s: np.ndarray | None = None,
 ) -> dict:
     """Vectorized :func:`simulate_client_times` over a round's participants.
 
     All array arguments are per-client; returns a dict of per-client arrays
     with the exact same formulas (so scheduler observations are identical to
     the scalar path). ``wires`` prices the wires under a compression codec
-    (``codec.WireSizes``); None keeps the legacy identity accounting."""
+    (``codec.WireSizes``); None keeps the legacy identity accounting.
+    ``far_flops``: per-client effective speed of whatever executes the far
+    half (already divided by any sharing) — None keeps the classic shared
+    server. ``link_bytes_per_s``: per-client effective wire bandwidth
+    (peer links are bottlenecked by both ends) — None uses each client's
+    own uplink."""
     tiers = np.asarray(tiers, int)
     nb = np.asarray(n_batches, float)
     if wires is None:
@@ -315,8 +333,12 @@ def simulate_client_times_batch(
     else:
         comm_bytes = wires.z_bytes[tiers] * nb + wires.param_bytes[tiers]
     t_c = costs.client_flops[tiers] * nb / np.asarray(flops, float)
-    t_com = comm_bytes / np.asarray(bytes_per_s, float)
-    t_s = costs.server_flops[tiers] * nb / (server_flops / max(n_sharing, 1))
+    link = bytes_per_s if link_bytes_per_s is None else link_bytes_per_s
+    t_com = comm_bytes / np.asarray(link, float)
+    if far_flops is None:
+        t_s = costs.server_flops[tiers] * nb / (server_flops / max(n_sharing, 1))
+    else:
+        t_s = costs.server_flops[tiers] * nb / np.asarray(far_flops, float)
     return {
         "client": t_c,
         "comm": t_com,

@@ -15,7 +15,7 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import tiering, timemodel
+from repro.core import splitting, tiering, timemodel
 from repro.core.local_loss import token_xent
 from repro.models import model as M
 from repro.models import resnet as R
@@ -65,10 +65,11 @@ class ResNetAdapter:
 
     def split(self, params: Params, tier: int):
         # tier is 0-based here; paper tier m keeps modules md1..md{m+1}
-        return R.split_params(params, self.cfg, tier + 1)
+        nb = R.n_blocks_in_modules(self.cfg, tier + 1)
+        return splitting.split_params(params, nb, splitting.RESNET)
 
     def merge(self, client: Params, server: Params) -> Params:
-        return R.merge_params(client, server)
+        return splitting.merge_params(client, server, splitting.RESNET)
 
     def aux_init(self, key, tier: int) -> Params:
         return R.aux_init(key, self.cfg, tier + 1)

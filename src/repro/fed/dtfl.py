@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.core import aggregation, timemodel
 from repro.core import codec as codec_lib
+from repro.core import topology as topology_lib
 from repro.core.scheduler import DynamicTierScheduler, StaticScheduler, TierProfile
 from repro.data import pipeline
 from repro.fed import cohort as cohort_engine
@@ -54,6 +55,7 @@ class DTFLTrainer:
         optimizer,
         *,
         scheduler: str | int = "dynamic",
+        topology: str = "server",
         seed: int = 0,
         local_epochs: int = 1,
         server_flops: float = timemodel.SERVER_FLOPS,
@@ -85,9 +87,24 @@ class DTFLTrainer:
         # register_scheduler'd strategies work here with no trainer change
         from repro import registry
 
+        if topology not in registry.topologies:
+            registry.topologies.validate(topology)   # raises with choices
+        if topology == "pairing" and scheduler == "dynamic":
+            scheduler = "pairing"
         self.sched = registry.schedulers.build(
             scheduler, profile=profile, n_clients=len(clients),
             n_tiers=adapter.n_tiers)
+        # the effective topology follows the scheduler: a host-providing
+        # scheduler (pairing) activates peer offload, anything else is the
+        # classic all-server topology
+        provides_hosts = getattr(self.sched, "provides_hosts", False)
+        if topology == "pairing" and not provides_hosts:
+            raise ValueError(
+                "topology='pairing' requires a host-providing scheduler "
+                "(scheduler='pairing' or 'pairing:greedy'), got "
+                f"{scheduler!r}")
+        self.topology = "pairing" if provides_hosts else "server"
+        self.last_hosts: dict[int, int] | None = None
         # per-tier aux heads, persistent and aggregated within tier cohorts
         self.aux = {
             m: adapter.aux_init(self._next_key(), m) for m in range(adapter.n_tiers)
@@ -233,23 +250,40 @@ class DTFLTrainer:
         Pure planning: no parameter updates, no scheduler observations — the
         engine decides which planned clients actually report (churn)."""
         self.env.maybe_switch(r)
-        assign = self.sched.schedule(participants)
+        # engine-side widening adapter: narrow cid->tier schedules (static /
+        # dynamic) and generalized cid->(tier, host) schedules (pairing) both
+        # become an OffloadTopology; plan.assign stays the narrow tier view
+        # every downstream consumer (cohorts, EF, logs) uses
+        topo = topology_lib.OffloadTopology.from_schedule(
+            self.sched.schedule(participants))
+        assign = topo.tiers()
         tiers = np.array([assign[k] for k in participants])
         profs = [self.env.profile(k) for k in participants]
         bps = np.array([p.bytes_per_s for p in profs])
         nb = np.array([self.clients[k].n_batches for k in participants])
-        t = timemodel.simulate_client_times_batch(
-            self.costs, tiers, np.array([p.flops for p in profs]), bps, nb,
-            server_flops=self.server_flops, n_sharing=len(participants),
-            wires=self.wires,
-        )
-        # codec-true client->server bytes of this round (z uplink + update
+        if topo.is_server_only:
+            t = timemodel.simulate_client_times_batch(
+                self.costs, tiers, np.array([p.flops for p in profs]), bps, nb,
+                server_flops=self.server_flops, n_sharing=len(participants),
+                wires=self.wires,
+            )
+            obs_nu = bps
+        else:
+            t = topology_lib.simulate_times(
+                self.costs, topo, participants, profs, nb,
+                server_flops=self.server_flops, wires=self.wires)
+            obs_nu = t["link"]   # guests report the pair link, not their uplink
+        # codec-true client->host bytes of this round (z uplink + update
         # upload), surfaced per round through RoundLog.uplink_bytes
         self.last_uplink_bytes = float(self.wires.uplink_bytes(tiers, nb).sum())
+        self.last_hosts = (None if topo.is_server_only else
+                           {k: h for k, h in topo.hosts().items()
+                            if h != topology_lib.SERVER})
         return RoundPlan(
             participants=list(participants), trained=list(participants),
             assign=assign, times=t["total"],
-            obs={"t": t["client"] + t["comm"], "nu": bps, "nb": nb},
+            obs={"t": t["client"] + t["comm"], "nu": obs_nu, "nb": nb},
+            topology=topo,
         )
 
     def execute_round(self, r: int, plan: RoundPlan, trained: list[int]) -> float:
@@ -563,6 +597,14 @@ class DTFLTrainer:
                 "ema_keys": np.array(ema_t or [[0, 0]][:0]).reshape(-1, 2),
                 "ema_vals": np.array(ema_v),
             }
+            if getattr(self.sched, "provides_hosts", False):
+                # pairing topology: the latest guest->host map rides the
+                # envelope so --resume re-enters the same offload topology
+                hosts = self.sched.last_hosts
+                state["sched"]["host_cids"] = np.array(
+                    sorted(hosts), dtype=np.int64)
+                state["sched"]["host_of"] = np.array(
+                    [hosts[c] for c in sorted(hosts)], dtype=np.int64)
         if self.codec.stateful:
             # error-feedback residuals ride the envelope so --resume
             # continues the compressed-upload stream bit-deterministically
@@ -604,6 +646,12 @@ class DTFLTrainer:
                 e = EMA()
                 e.value = float(v)
                 self.sched.clients[int(cid)].ema[int(tier)] = e
+            if "host_cids" in sc and getattr(self.sched, "provides_hosts",
+                                            False):
+                self.sched.last_hosts = {
+                    int(c): int(h)
+                    for c, h in zip(np.asarray(sc["host_cids"]).reshape(-1),
+                                    np.asarray(sc["host_of"]).reshape(-1))}
         if "ef" in state:
             self._ef = {
                 int(cid): {"tier": int(st["tier"]), "c": st["c"], "a": st["a"]}

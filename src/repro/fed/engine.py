@@ -66,6 +66,10 @@ class RoundLog:
     # codec-true client->server bytes planned for the round (z uplink +
     # update upload; fed/dtfl.py / fed/base.py set it in plan_round)
     uplink_bytes: float = 0.0
+    # guest cid -> host cid under a peer-offload topology (core/topology.py);
+    # None for the classic all-server topology, so server-mode logs are
+    # unchanged field-for-field
+    hosts: dict[int, int] | None = None
 
 
 @dataclass
@@ -78,6 +82,17 @@ class RoundPlan:
     times: np.ndarray              # (len(trained),) Eq.-5 completion offsets
     obs: dict | None = None        # scheduler observation arrays:
                                    #   t (client+comm), nu, nb — or None
+    topology: object | None = None  # core.topology.OffloadTopology, or None
+                                    # (classic all-server far-half placement)
+
+
+def _plan_hosts(plan: RoundPlan) -> dict[int, int] | None:
+    """Guest->host map for the round log; None when every far half runs on
+    the server (keeps server-mode logs identical to the pre-topology path)."""
+    topo = plan.topology
+    if topo is None or topo.is_server_only:
+        return None
+    return {k: h for k, h in topo.hosts().items() if h != -1}
 
 
 def split_speed_groups(order: list[int], n_groups: int) -> list[list[int]]:
@@ -216,11 +231,15 @@ def run_rounds(
         acc = float(eval_fn(trainer.params, eval_batch)) if r % eval_every == 0 else (
             logs[-1].acc if logs else last_acc)
         logs.append(RoundLog(r, clock, acc, assign, straggler,
-                             uplink_bytes=getattr(trainer, "last_uplink_bytes", 0.0)))
+                             uplink_bytes=getattr(trainer, "last_uplink_bytes", 0.0),
+                             hosts=getattr(trainer, "last_hosts", None)))
         next_round = r + 1
         if verbose:
             tiers = f" tiers={sorted(set(assign.values()))}" if assign else ""
-            print(f"[{trainer.name}] r={r} clock={clock:.0f}s acc={acc:.3f}{tiers}")
+            hosts = logs[-1].hosts
+            pairs = f" pairs={sorted(hosts.items())}" if hosts else ""
+            print(f"[{trainer.name}] r={r} clock={clock:.0f}s acc={acc:.3f}"
+                  f"{tiers}{pairs}")
         if checkpoint_path and (r + 1) % checkpoint_every == 0:
             save_train_state(checkpoint_path, trainer, round_=r + 1,
                              clock=clock, rng=rng, acc=acc)
@@ -366,12 +385,15 @@ def run_events(
         logs.append(RoundLog(r, q.now, acc,
                              plan.assign if hasattr(trainer, "sched") else {},
                              straggler,
-                             uplink_bytes=getattr(trainer, "last_uplink_bytes", 0.0)))
+                             uplink_bytes=getattr(trainer, "last_uplink_bytes", 0.0),
+                             hosts=_plan_hosts(plan)))
         next_round = r + 1
         if verbose:
             dropped = len(plan.trained) - len(trained)
+            hosts = logs[-1].hosts
             print(f"[events:{trainer.name}] r={r} clock={q.now:.0f}s acc={acc:.3f}"
-                  + (f" dropped={dropped}" if dropped else ""))
+                  + (f" dropped={dropped}" if dropped else "")
+                  + (f" pairs={sorted(hosts.items())}" if hosts else ""))
         if checkpoint_path and (r + 1) % checkpoint_every == 0:
             save_train_state(checkpoint_path, trainer, round_=r + 1,
                              clock=q.now, rng=rng, acc=acc, engine="events")
@@ -446,7 +468,8 @@ def run_async(
     q.advance_to(float(plan0.times.max()))
     acc = float(eval_fn(trainer.params, eval_batch))
     logs.append(RoundLog(0, q.now, acc, plan0.assign, float(plan0.times.max()),
-                         uplink_bytes=getattr(trainer, "last_uplink_bytes", 0.0)))
+                         uplink_bytes=getattr(trainer, "last_uplink_bytes", 0.0),
+                         hosts=_plan_hosts(plan0)))
     if target_acc is not None and acc >= target_acc:
         return logs
 
@@ -534,7 +557,8 @@ def run_async(
             acc = float(eval_fn(trainer.params, eval_batch)) if (
                 merges % eval_every == 0) else logs[-1].acc
             logs.append(RoundLog(merges, q.now, acc, dict(plan.assign), wave_time,
-                                 uplink_bytes=getattr(trainer, "last_uplink_bytes", 0.0)))
+                                 uplink_bytes=getattr(trainer, "last_uplink_bytes", 0.0),
+                                 hosts=_plan_hosts(plan)))
             if verbose:
                 print(f"[async:{trainer.name}] merge={merges} group={g} "
                       f"clock={q.now:.0f}s acc={acc:.3f}")

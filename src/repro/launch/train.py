@@ -78,6 +78,11 @@ def build_parser() -> argparse.ArgumentParser:
                     type=_registry_type(registry.schedulers),
                     help="tier scheduler spec: "
                          + " | ".join(registry.schedulers.choices()))
+    ap.add_argument("--topology", default="server",
+                    type=_registry_type(registry.topologies),
+                    help="offload topology: server (classic DTFL) | pairing "
+                         "(fast clients host slow clients' far halves; "
+                         "implies --scheduler pairing)")
     ap.add_argument("--engine", default=None,
                     type=lambda s: s if s == "auto"  # the spec-level default
                     else _registry_type(registry.engines)(s),
@@ -167,6 +172,7 @@ def spec_from_args(args) -> ExperimentSpec:
                       seq_len=args.seq_len),
         env=EnvSpec(switch_every=args.switch_every),
         trainer=TrainerSpec(method=args.method, scheduler=args.scheduler,
+                            topology=args.topology,
                             lr=args.lr, dcor_alpha=args.dcor_alpha,
                             sample_size=args.sample_size),
         engine=EngineSpec(name=args.engine or "auto", n_groups=args.n_groups,

@@ -179,23 +179,8 @@ def forward(params: Params, cfg, images: jax.Array) -> jax.Array:
 
 # ---------------------------------------------------------------------------
 # DTFL split: client modules [1..m], server modules (m..8], aux = avgpool+fc
+# (tree split/merge mechanics live in core/splitting.py; boundary policy here)
 # ---------------------------------------------------------------------------
-
-def split_params(params: Params, cfg, tier_module: int) -> tuple[Params, Params]:
-    """Client keeps stem + blocks of modules <= tier_module; server the rest."""
-    nb = n_blocks_in_modules(cfg, tier_module)
-    client = {"stem": params["stem"], "blocks": params["blocks"][:nb]}
-    server = {"blocks": params["blocks"][nb:], "fc": params["fc"]}
-    return client, server
-
-
-def merge_params(client: Params, server: Params) -> Params:
-    return {
-        "stem": client["stem"],
-        "blocks": list(client["blocks"]) + list(server["blocks"]),
-        "fc": server["fc"],
-    }
-
 
 def client_forward(client: Params, cfg, images: jax.Array) -> jax.Array:
     x = jax.nn.relu(groupnorm(conv(images, client["stem"]["conv"]), **client["stem"]["gn"]))

@@ -44,12 +44,27 @@ def table1_static(tier: int | None = 6, *, rounds: int = 30,
 
 
 def table3(method: str = "dtfl", *, iid: bool = True, rounds: int = 10,
-           target: float = 0.55) -> ExperimentSpec:
-    """Table 3: time-to-target, DTFL vs the baselines, IID / non-IID."""
+           target: float = 0.55, topology: str = "server") -> ExperimentSpec:
+    """Table 3: time-to-target, DTFL vs the baselines, IID / non-IID.
+    ``topology="pairing"`` is the mutual-offload row (``dtfl_pairing`` in
+    benchmarks/table3_baselines.py) — same heterogeneity profile, fast
+    clients hosting slow clients' far halves."""
     return ExperimentSpec(
         model=ModelSpec(cost_model="resnet-110"),
         data=DataSpec(clients=10, iid=iid),
-        trainer=TrainerSpec(method=method),
+        trainer=TrainerSpec(method=method, topology=topology),
+        rounds=rounds, target_acc=target,
+    )
+
+
+def pairing_demo(*, rounds: int = 8, clients: int = 10,
+                 target: float | None = None) -> ExperimentSpec:
+    """Mutual-offload tour: DTFL with the pairing topology on the paper's
+    heterogeneity profile (fast clients host slow clients' far halves)."""
+    return ExperimentSpec(
+        model=ModelSpec(cost_model="resnet-110"),
+        data=DataSpec(clients=clients, iid=True),
+        trainer=TrainerSpec(method="dtfl", scheduler="pairing"),
         rounds=rounds, target_acc=target,
     )
 
@@ -203,6 +218,7 @@ PRESETS = {
     "quickstart": quickstart,
     "table1_static": table1_static,
     "table3": table3,
+    "pairing_demo": pairing_demo,
     "table4_accuracy": table4_accuracy,
     "table4_wall": table4_wall,
     "table4_population": table4_population,

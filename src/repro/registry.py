@@ -126,6 +126,7 @@ exec_modes = Registry("exec mode")
 datasets = Registry("dataset")
 archs = Registry("arch")
 profile_pools = Registry("profile pool")
+topologies = Registry("topology")
 
 
 def register_trainer(name: str, target: str | type, *, supports_async: bool = True,
@@ -231,10 +232,36 @@ def _build_static(spec: str, *, profile, n_clients: int, n_tiers: int):
     return StaticScheduler(int(spec), n_clients)
 
 
+def _parse_pairing(s: str) -> str | None:
+    if s == "pairing" or s == "pairing:hungarian":
+        return "pairing"
+    if s == "pairing:greedy":
+        return s
+    return None
+
+
+def _build_pairing(spec: str, *, profile, n_clients: int, n_tiers: int):
+    from repro.core.scheduler import PairingScheduler
+
+    method = spec.split(":", 1)[1] if ":" in spec else "hungarian"
+    return PairingScheduler(profile, n_clients, method=method)
+
+
 register_scheduler("dynamic", build=_build_dynamic, parse=_parse_dynamic,
                    pattern="dynamic | dynamic:<M>")
 register_scheduler("static", build=_build_static, parse=_parse_static,
                    pattern="<fixed tier index, e.g. 0>")
+register_scheduler("pairing", build=_build_pairing, parse=_parse_pairing,
+                   pattern="pairing | pairing:greedy", provides_hosts=True)
+
+# Offload topologies (core/topology.py): who executes a client's far half.
+# ``scheduler`` names the scheduler family that produces the required
+# assignment shape; spec validation (api.py) keeps the two fields coherent.
+topologies.register("server", scheduler=None,
+                    doc="classic DTFL: every far half runs on the server")
+topologies.register("pairing", scheduler="pairing",
+                    doc="mutual offload: fast clients host slow clients' "
+                        "far halves (arxiv 2308.13849)")
 
 
 def _codec_build(cls_name: str):

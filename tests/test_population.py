@@ -19,6 +19,7 @@ Four families of guarantees:
 * O(population) hotspot regressions: int-pool sampling is stream-identical
   to the arange it replaced, and per-round sampling cost is O(sample).
 """
+import json
 import os
 
 import jax
@@ -515,3 +516,30 @@ def test_bench_check_gate(tmp_path, monkeypatch, capsys):
         bench_run, "_fresh_walls",
         lambda: {k: v for k, v in fresh.items() if k != "10/cohort"})
     assert bench_run._check_baseline(base) == 0
+
+
+def test_bench_check_gate_table3(tmp_path, monkeypatch, capsys):
+    """--check dispatches on meta.suite: the table3 baseline gates the
+    simulated clocks AND the pairing-beats-dtfl invariant."""
+    bench_run = pytest.importorskip("benchmarks.run")
+    fresh = {"iid/dtfl": 30.0, "iid/dtfl_pairing": 27.0}
+    monkeypatch.setattr(bench_run, "_fresh_table3", lambda meta: dict(fresh))
+
+    base = os.path.join(str(tmp_path), "BENCH_table3.json")
+    bench_run._write_baseline(base)
+    with open(base) as f:
+        meta = json.load(f)["meta"]
+    assert meta["suite"] == "table3_baselines"
+
+    out = os.path.join(str(tmp_path), "fresh.json")
+    assert bench_run._check_baseline(base, out=out) == 0
+    assert json.load(open(out))["meta"]["suite"] == "table3_baselines"
+
+    # a >1.5x clock regression fails
+    monkeypatch.setattr(bench_run, "_fresh_table3",
+                        lambda meta: {**fresh, "iid/dtfl_pairing": 50.0})
+    assert bench_run._check_baseline(base) >= 1
+    # pairing merely *not beating* dtfl fails too, even inside tolerance
+    monkeypatch.setattr(bench_run, "_fresh_table3",
+                        lambda meta: {**fresh, "iid/dtfl_pairing": 31.0})
+    assert bench_run._check_baseline(base) == 1

@@ -5,7 +5,13 @@ import numpy as np
 import pytest
 
 from repro.configs.resnet_cifar import RESNET56, RESNET110, get_resnet
+from repro.core import splitting
 from repro.models import resnet as R
+
+
+def _split(p, cfg, tier_module):
+    nb = R.n_blocks_in_modules(cfg, tier_module)
+    return splitting.split_params(p, nb, splitting.RESNET)
 
 
 @pytest.mark.parametrize("cfg", [RESNET56.reduced(), RESNET56, RESNET110])
@@ -15,7 +21,7 @@ def test_forward_and_splits(cfg, key):
     want = R.forward(p, cfg, x)
     assert want.shape == (2, cfg.n_classes)
     for tier in range(1, cfg.n_modules):
-        c, s = R.split_params(p, cfg, tier)
+        c, s = _split(p, cfg, tier)
         z = R.client_forward(c, cfg, x)
         got = R.server_forward(s, cfg, z, tier)
         np.testing.assert_allclose(want, got, atol=1e-4)
@@ -40,8 +46,8 @@ def test_table10_aux_channels():
 def test_merge_roundtrip(key):
     cfg = RESNET56.reduced()
     p = R.init(key, cfg)
-    c, s = R.split_params(p, cfg, 2)
-    m = R.merge_params(c, s)
+    c, s = _split(p, cfg, 2)
+    m = splitting.merge_params(c, s, splitting.RESNET)
     assert jax.tree.all(jax.tree.map(jnp.array_equal, p, m))
 
 

@@ -165,3 +165,153 @@ def test_scheduler_beats_static_on_heterogeneous_pool():
         return max(dyn.estimate(k)[m] for k in range(5))
 
     assert t_dyn <= min(static_time(m) for m in range(prof.n_tiers)) + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# PairingScheduler (mutual offload, arxiv 2308.13849)
+# ---------------------------------------------------------------------------
+
+from itertools import permutations
+
+from repro.core.scheduler import (PairingScheduler, _greedy_pairs,
+                                  _hungarian_pairs)
+from repro.core.topology import SERVER, Assignment, OffloadTopology
+
+
+def _brute_force_total(C):
+    n = C.shape[0]
+    return min(sum(C[i, j] for i, j in enumerate(p))
+               for p in permutations(range(n)))
+
+
+def _matching_total(C, pairs):
+    assert sorted(g for g, _ in pairs) == list(range(C.shape[0]))
+    assert sorted(h for _, h in pairs) == list(range(C.shape[0]))
+    return sum(C[g, h] for g, h in pairs)
+
+
+def _observed_pairing(speeds, *, seed=0, method="hungarian", rounds=3):
+    """A PairingScheduler that has observed ``speeds`` for a few rounds."""
+    prof = make_profile(seed=seed)
+    s = PairingScheduler(prof, n_clients=len(speeds), method=method)
+    for _ in range(rounds):
+        s.schedule()
+        observe_synthetic(s, prof, speeds)
+    return s
+
+
+def test_hungarian_matches_bruteforce_small_instances():
+    """<=6-client instances: the Hungarian matching achieves the brute-force
+    minimum total pair cost (3x3 matrices = 6 clients and under)."""
+    for seed in range(25):
+        rng = np.random.default_rng(seed)
+        for n in (1, 2, 3):
+            C = rng.uniform(1.0, 10.0, (n, n))
+            got = _matching_total(C, _hungarian_pairs(C))
+            assert got == pytest.approx(_brute_force_total(C), rel=1e-12)
+
+
+def test_hungarian_matches_bruteforce_larger():
+    for seed in range(8):
+        C = np.random.default_rng(100 + seed).uniform(0.1, 50.0, (5, 5))
+        got = _matching_total(C, _hungarian_pairs(C))
+        assert got == pytest.approx(_brute_force_total(C), rel=1e-12)
+
+
+def test_greedy_within_bounded_factor():
+    """Slowest-guest-first greedy stays within 3x of the optimal matching on
+    a deterministic battery of random instances (and is a valid matching)."""
+    for seed in range(30):
+        rng = np.random.default_rng(1000 + seed)
+        n = int(rng.integers(2, 7))
+        C = rng.uniform(1.0, 10.0, (n, n))
+        greedy = _matching_total(C, _greedy_pairs(C))
+        best = _brute_force_total(C)
+        assert best <= greedy + 1e-12
+        assert greedy <= 3.0 * best
+
+
+def test_pairing_never_observed_falls_back_to_server():
+    prof = make_profile()
+    s = PairingScheduler(prof, n_clients=6)
+    out = s.schedule()
+    assert all(isinstance(a, Assignment) for a in out.values())
+    assert all(a.host == SERVER for a in out.values())
+    assert s.last_hosts == {}
+    # ... and the tiers equal the plain Algorithm-1 schedule
+    dyn = DynamicTierScheduler(prof, n_clients=6)
+    assert {k: a.tier for k, a in out.items()} == dyn.schedule()
+
+
+@pytest.mark.parametrize("speed", [4.0, 0.1])
+def test_pairing_homogeneous_cohort_falls_back_to_server(speed):
+    """All-fast and all-slow cohorts have nothing to gain from pairing."""
+    s = _observed_pairing([speed] * 6)
+    out = s.schedule()
+    assert all(a.host == SERVER for a in out.values())
+    assert s.last_hosts == {}
+
+
+def test_pairing_matches_fast_hosts_with_slow_guests():
+    speeds = [8.0, 6.0, 4.0, 0.3, 0.2, 0.1]
+    s = _observed_pairing(speeds)
+    out = s.schedule()
+    hosts = {a.host for a in out.values() if a.host != SERVER}
+    guests = {k for k, a in out.items() if a.host != SERVER}
+    assert guests, "spread cohort must produce at least one pair"
+    assert hosts <= {0, 1, 2}          # hosts come from the fast half
+    assert guests <= {3, 4, 5}         # guests from the slow half
+    assert not (hosts & guests)        # a host is never itself a guest
+    for k, a in out.items():
+        assert 0 <= a.tier < s.profile.n_tiers
+    assert s.last_hosts == {k: out[k].host for k in guests}
+
+
+def test_pairing_odd_cohort_leaves_middle_on_server():
+    speeds = [8.0, 6.0, 0.2, 0.15, 0.1]
+    s = _observed_pairing(speeds)
+    out = s.schedule()
+    paired = [k for k, a in out.items() if a.host != SERVER]
+    assert len(paired) <= 2            # floor(5/2) pairs at most
+    assert len(out) - len(paired) >= 3  # hosts + the odd one stay on SERVER
+
+
+def test_pairing_greedy_method_and_bad_method():
+    s = _observed_pairing([8.0, 6.0, 0.2, 0.1], method="greedy")
+    out = s.schedule()
+    assert any(a.host != SERVER for a in out.values())
+    with pytest.raises(ValueError, match="greedy"):
+        PairingScheduler(make_profile(), 4, method="nope")
+
+
+def test_engine_adapter_widens_narrow_schedules():
+    """Satellite: static/dynamic schedule() keeps its narrow cid->tier dict;
+    the ONE widening point is OffloadTopology.from_schedule."""
+    prof = make_profile()
+    for sched in (StaticScheduler(tier=2, n_clients=4),
+                  DynamicTierScheduler(prof, n_clients=4)):
+        narrow = sched.schedule()
+        assert all(isinstance(v, int) for v in narrow.values())
+        topo = OffloadTopology.from_schedule(narrow)
+        assert topo.is_server_only
+        assert topo.tiers() == narrow
+        assert topo.hosts() == {k: SERVER for k in narrow}
+    # and the generalized dict widens losslessly too
+    wide = OffloadTopology.from_schedule({0: (3, SERVER), 1: (1, 0)})
+    assert not wide.is_server_only
+    assert wide.tiers() == {0: 3, 1: 1}
+    assert wide.guests_of() == {0: [1]}
+
+
+def test_pairing_profile_has_server_speedup():
+    from repro.configs.resnet_cifar import RESNET110
+
+    costs = timemodel.resnet_tier_costs(RESNET110, 32)
+    prof = TierProfile.from_cost_table(
+        costs, ref_flops=timemodel.UNIT_FLOPS,
+        server_flops=timemodel.SERVER_FLOPS)
+    assert prof.server_speedup == pytest.approx(
+        timemodel.SERVER_FLOPS / timemodel.UNIT_FLOPS)
+    # legacy construction defaults to the global ratio
+    assert make_profile().server_speedup == pytest.approx(
+        timemodel.SERVER_FLOPS / timemodel.UNIT_FLOPS)

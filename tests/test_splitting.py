@@ -1,0 +1,73 @@
+"""Unified split plane (core/splitting.py): lossless round trips for both
+archs at every boundary, and the delegation from tiering / the adapters."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.configs.resnet_cifar import RESNET56
+from repro.core import splitting, tiering
+from repro.models import model as M
+from repro.models import resnet as R
+
+
+def _trees_equal(a, b) -> bool:
+    return jax.tree.all(jax.tree.map(jnp.array_equal, a, b))
+
+
+def test_resnet_roundtrip_every_boundary(key):
+    cfg = RESNET56.reduced()
+    params = R.init(key, cfg)
+    n = len(params["blocks"])
+    for boundary in range(n + 1):
+        near, far = splitting.split_params(params, boundary, splitting.RESNET)
+        assert "stem" in near and "fc" in far
+        assert len(near["blocks"]) == boundary
+        assert len(far["blocks"]) == n - boundary
+        merged = splitting.merge_params(near, far, splitting.RESNET)
+        assert _trees_equal(params, merged), boundary
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_transformer_roundtrip_every_boundary(arch, key):
+    cfg = get_config(arch).reduced().replace(tie_embeddings=False, n_modules=3)
+    params = M.init(key, cfg)
+    for boundary in range(cfg.n_layers + 1):
+        near, far = splitting.split_params(params, boundary,
+                                           splitting.TRANSFORMER)
+        merged = splitting.merge_params(near, far, splitting.TRANSFORMER)
+        assert _trees_equal(params, merged), (arch, boundary)
+
+
+def test_resnet_split_matches_module_boundary(key):
+    """The adapter's split must land client blocks exactly at the paper's
+    module boundary (pre-refactor models/resnet.py:split_params semantics)."""
+    cfg = RESNET56.reduced()
+    params = R.init(key, cfg)
+    for tier_module in range(1, cfg.n_modules):
+        nb = R.n_blocks_in_modules(cfg, tier_module)
+        near, far = splitting.split_params(params, nb, splitting.RESNET)
+        assert _trees_equal(near["stem"], params["stem"])
+        assert _trees_equal(far["fc"], params["fc"])
+        assert _trees_equal(near["blocks"], params["blocks"][:nb])
+        assert _trees_equal(far["blocks"], params["blocks"][nb:])
+
+
+def test_tiering_delegates_to_splitting(key):
+    """tiering.split_params(cfg, tier) == splitting at split_layer(cfg, tier)."""
+    cfg = get_config(ASSIGNED_ARCHS[0]).reduced().replace(
+        tie_embeddings=False, n_modules=3)
+    params = M.init(key, cfg)
+    for tier in range(1, tiering.n_tiers(cfg) + 1):
+        via_tiering = tiering.split_params(params, cfg, tier)
+        via_splitting = splitting.split_params(
+            params, tiering.split_layer(cfg, tier), splitting.TRANSFORMER)
+        for a, b in zip(via_tiering, via_splitting):
+            assert _trees_equal(a, b), tier
+
+
+def test_resnet_has_no_local_split():
+    """The duplicated resnet-local split/merge is gone; core/splitting.py is
+    the single home (the tentpole's dedup)."""
+    assert not hasattr(R, "split_params")
+    assert not hasattr(R, "merge_params")

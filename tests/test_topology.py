@@ -1,0 +1,245 @@
+"""Offload-topology plane: server-mode bit-equivalence, per-link pricing,
+pairing execution equivalence, and checkpoint resume with pairing state.
+
+The pre-refactor equivalence contract is pinned twice: tests/test_api.py's
+golden test compares the spec path against commit f781a4b's direct wiring
+(dtfl+fedavg x rounds+events), and here ``topology=server`` is compared
+field-for-field against the topology-free default path."""
+import numpy as np
+import pytest
+
+from repro.api import (DataSpec, ExperimentSpec, ModelSpec, SpecError,
+                       TrainerSpec)
+from repro.core import timemodel, topology
+from repro.core.topology import SERVER, Assignment, OffloadTopology
+
+
+def _tiny_spec(**over):
+    spec = ExperimentSpec(
+        model=ModelSpec(cost_model="resnet-110"),
+        data=DataSpec(clients=4, samples=128, batch_size=16, iid=True,
+                      eval_size=128),
+        rounds=2)
+    return spec.with_overrides(over) if over else spec
+
+
+def _log_tuple(lg):
+    return (lg.round, lg.clock, lg.acc, lg.assignment, lg.straggler,
+            lg.uplink_bytes, lg.hosts)
+
+
+def _params_equal(a, b) -> bool:
+    import jax
+
+    same = jax.tree.map(
+        lambda x, y: bool((np.asarray(x) == np.asarray(y)).all()), a, b)
+    return all(jax.tree.leaves(same))
+
+
+def _params_close(a, b, atol=2e-4, rtol=1e-3):
+    """Loop vs cohort tolerance — XLA schedules the planes differently, so
+    they agree to numerics, not bitwise (same bound as tests/test_cohort.py)."""
+    import jax
+
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   atol=atol, rtol=rtol)
+
+
+# ---------------------------------------------------------------------------
+# time model: per-link / far-profile pricing
+# ---------------------------------------------------------------------------
+
+def _costs():
+    from repro.configs.resnet_cifar import RESNET110
+
+    return timemodel.resnet_tier_costs(RESNET110, 32)
+
+
+def test_simulate_times_server_only_reduces_to_legacy():
+    """An all-server topology prices bit-identically to the legacy batch
+    call with n_sharing=len(participants) — the refactor's core contract."""
+    costs = _costs()
+    parts = [0, 1, 2, 3, 4]
+    profs = [timemodel.PAPER_PROFILES[i % len(timemodel.PAPER_PROFILES)]
+             for i in parts]
+    tiers = np.array([6, 4, 3, 1, 0])
+    nb = np.array([4, 7, 4, 9, 3])
+    topo = OffloadTopology({k: Assignment(int(tiers[i]), SERVER)
+                            for i, k in enumerate(parts)})
+    got = topology.simulate_times(costs, topo, parts, profs, nb)
+    want = timemodel.simulate_client_times_batch(
+        costs, tiers, np.array([p.flops for p in profs]),
+        np.array([p.bytes_per_s for p in profs]), nb,
+        n_sharing=len(parts))
+    for k in ("client", "comm", "server", "total"):
+        np.testing.assert_array_equal(got[k], want[k], err_msg=k)
+
+
+def test_far_profile_and_link_override_scalar():
+    costs = _costs()
+    guest = timemodel.ResourceProfile(cpus=0.2, mbps=30)
+    host = timemodel.ResourceProfile(cpus=4.0, mbps=100)
+    tier, nb = 2, 5
+    t = timemodel.simulate_client_times(
+        costs, tier, guest, nb, far_profile=host,
+        link_bytes_per_s=min(guest.bytes_per_s, host.bytes_per_s))
+    comm_bytes = costs.d_size(tier, nb) * nb
+    assert t["comm"] == pytest.approx(comm_bytes / guest.bytes_per_s)
+    assert t["server"] == pytest.approx(
+        costs.server_flops[tier] * nb / host.flops)
+    assert t["total"] == pytest.approx(
+        max(t["client"] + t["comm"], t["server"] + t["comm"]))
+    # defaults unchanged: no overrides == the legacy call
+    legacy = timemodel.simulate_client_times(costs, tier, guest, nb,
+                                             n_sharing=3)
+    relegacy = timemodel.simulate_client_times(costs, tier, guest, nb,
+                                               n_sharing=3, far_profile=None,
+                                               link_bytes_per_s=None)
+    assert legacy == relegacy
+
+
+def test_pairing_topology_prices_peer_links_and_hosting():
+    """Guests pay the bottleneck link + the host's device speed; hosts pay
+    their own round plus their guests' far-half work."""
+    costs = _costs()
+    fast = timemodel.ResourceProfile(cpus=4.0, mbps=100)
+    slow = timemodel.ResourceProfile(cpus=0.2, mbps=10)
+    parts = [0, 1]
+    topo = OffloadTopology({0: Assignment(5, SERVER),    # host: on server
+                            1: Assignment(1, 0)})        # guest: hosted by 0
+    nb = np.array([4, 4])
+    t = topology.simulate_times(costs, topo, parts, [fast, slow], nb)
+    # guest wire is the min of the two ends
+    assert t["link"][1] == pytest.approx(slow.bytes_per_s)
+    # guest far half runs at the host's full speed
+    assert t["server"][1] == pytest.approx(
+        costs.server_flops[1] * 4 / fast.flops)
+    # host total = its own Eq.-5 time + the guest's far-half work
+    own = max(t["client"][0] + t["comm"][0], t["server"][0] + t["comm"][0])
+    assert t["total"][0] == pytest.approx(own + t["server"][1])
+    # the server now shares capacity over ONE client, not two
+    assert t["server"][0] == pytest.approx(
+        costs.server_flops[5] * 4 / timemodel.SERVER_FLOPS)
+
+
+# ---------------------------------------------------------------------------
+# topology=server is bit-identical to the default path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["dtfl", "fedavg"])
+@pytest.mark.parametrize("engine", ["rounds", "events"])
+def test_server_topology_bit_identical(method, engine):
+    base = _tiny_spec(**{"trainer.method": method, "engine.name": engine})
+    expl = _tiny_spec(**{"trainer.method": method, "engine.name": engine,
+                         "trainer.topology": "server"})
+    fed_a, fed_b = base.build(), expl.build()
+    logs_a, logs_b = fed_a.run(), fed_b.run()
+    assert [_log_tuple(l) for l in logs_a] == [_log_tuple(l) for l in logs_b]
+    assert all(l.hosts is None for l in logs_a)
+    assert _params_equal(fed_a.trainer.params, fed_b.trainer.params)
+
+
+def test_server_mode_scheduler_observations_unchanged():
+    """plan_round's server branch must feed the scheduler the exact legacy
+    observation arrays (obs.nu = own uplink, obs.t = client + comm)."""
+    fed = _tiny_spec().build()
+    tr = fed.trainer
+    participants = list(range(4))
+    plan = tr.plan_round(0, participants)
+    assert plan.topology is not None and plan.topology.is_server_only
+    tiers = np.array([plan.assign[k] for k in participants])
+    profs = [tr.env.profile(k) for k in participants]
+    nb = np.array([tr.clients[k].n_batches for k in participants])
+    want = timemodel.simulate_client_times_batch(
+        tr.costs, tiers, np.array([p.flops for p in profs]),
+        np.array([p.bytes_per_s for p in profs]), nb,
+        server_flops=tr.server_flops, n_sharing=len(participants),
+        wires=tr.wires)
+    np.testing.assert_array_equal(plan.times, want["total"])
+    np.testing.assert_array_equal(plan.obs["t"], want["client"] + want["comm"])
+    np.testing.assert_array_equal(
+        plan.obs["nu"], np.array([p.bytes_per_s for p in profs]))
+
+
+# ---------------------------------------------------------------------------
+# pairing mode: exec-plane equivalence, resume, spec surface
+# ---------------------------------------------------------------------------
+
+def _pairing_spec(**over):
+    spec = ExperimentSpec(
+        model=ModelSpec(cost_model="resnet-110"),
+        data=DataSpec(clients=6, samples=192, batch_size=16, iid=True,
+                      eval_size=128),
+        trainer=TrainerSpec(method="dtfl", scheduler="pairing"),
+        rounds=3)
+    return spec.with_overrides(over) if over else spec
+
+
+def test_pairing_loop_vs_cohort_equivalence():
+    """Pairing changes scheduling + accounting, never the training math —
+    the loop and cohort exec planes stay equivalent: identical logs
+    (clocks, tiers, hosts, bytes) and params within the same numeric
+    tolerance test_cohort.py pins for the server topology."""
+    fed_l = _pairing_spec(**{"exec.mode": "loop"}).build()
+    fed_c = _pairing_spec(**{"exec.mode": "cohort"}).build()
+    logs_l, logs_c = fed_l.run(), fed_c.run()
+    assert [_log_tuple(l) for l in logs_l] == [_log_tuple(l) for l in logs_c]
+    assert any(lg.hosts for lg in logs_l), "pairing must activate"
+    _params_close(fed_l.trainer.params, fed_c.trainer.params)
+
+
+def test_pairing_checkpoint_resume_carries_assignment(tmp_path):
+    path = str(tmp_path / "state.npz")
+    full = _pairing_spec(rounds=4).build()
+    full_logs = full.run()
+    ck = _pairing_spec(**{"rounds": 2, "checkpoint.path": path,
+                          "checkpoint.every": 2}).build()
+    ck.run()
+    saved_hosts = dict(ck.trainer.sched.last_hosts)
+    assert saved_hosts, "pairing must have activated before the checkpoint"
+    rest = _pairing_spec(**{"rounds": 4, "checkpoint.resume": path}).build()
+    # the envelope carries the guest->host map and load_state restores it
+    # (Federation.run() applies the same load before its first round)
+    from repro import checkpoint as ckpt
+
+    rest.trainer.load_state(ckpt.load(path)["trainer"])
+    assert rest.trainer.sched.last_hosts == saved_hosts
+    rest_logs = rest.run()
+    tail = full_logs[2:]
+    assert [l.round for l in rest_logs] == [l.round for l in tail]
+    for a, b in zip(rest_logs, tail):
+        assert (a.clock, a.acc, a.straggler, a.assignment, a.hosts) == (
+            b.clock, b.acc, b.straggler, b.assignment, b.hosts)
+
+
+def test_pairing_spec_surface():
+    fed = _pairing_spec().build()
+    assert fed.trainer.topology == "pairing"
+    assert fed.spec.trainer.topology == "pairing"
+    assert getattr(fed.trainer.sched, "provides_hosts", False)
+
+
+def test_nonsplit_trainers_reject_pairing():
+    """Satellite regression: non-split trainers reject scheduler=pairing at
+    spec time with the legal choices listed."""
+    with pytest.raises(SpecError, match="tier-scheduling"):
+        ExperimentSpec(trainer=TrainerSpec(method="fedavg",
+                                           scheduler="pairing"))
+    with pytest.raises(SpecError, match="tier-scheduling"):
+        ExperimentSpec(trainer=TrainerSpec(method="splitfed",
+                                           topology="pairing"))
+    # direct ctor misuse (bypassing the spec layer) also fails loudly
+    with pytest.raises(ValueError, match="pairing"):
+        TrainerSpec(method="dtfl", scheduler=3, topology="pairing")
+
+
+def test_topology_cli_flag_roundtrip():
+    from repro.launch.train import build_parser, spec_from_args
+
+    spec = spec_from_args(build_parser().parse_args(
+        ["--topology", "pairing", "--rounds", "1"]))
+    assert spec.trainer.topology == "pairing"
+    assert spec.trainer.scheduler == "pairing"
+    with pytest.raises(SystemExit):
+        build_parser().parse_args(["--topology", "mesh"])
